@@ -1,0 +1,48 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run JSON. Usage: python scripts/make_tables.py runs/dryrun_final.json"""
+import json
+import sys
+
+
+def fmt(path):
+    d = json.load(open(path))
+    out = []
+    for mesh_tag, title in (("|16x16|", "single-pod 16x16 (256 chips)"),
+                            ("|2x16x16|", "multi-pod 2x16x16 (512 chips)")):
+        rows, skips = [], []
+        for k, v in sorted(d.items()):
+            if mesh_tag not in k:
+                continue
+            if not (k.endswith("|baseline") or k.endswith("|final")):
+                continue
+            arch, shape = k.split("|")[0], k.split("|")[1]
+            if v["status"] == "skipped":
+                skips.append((arch, shape, v.get("skip", "")))
+                continue
+            if v["status"] != "ok":
+                rows.append((arch, shape, v["status"], "", "", "", "", "",
+                             ""))
+                continue
+            r = v["roofline"]
+            m = v["memory"]
+            dom = r["dominant"]
+            rows.append((
+                arch, shape, f'{r["compute_s"]:.3f}', f'{r["memory_s"]:.3f}',
+                f'{r["collective_s"]:.4f}', dom,
+                f'{r["useful_ratio"]:.2f}',
+                f'{(m["args"] + m["temp"]) / 2**30:.1f}',
+                f'{v.get("compile_s", "")}'))
+        out.append(f"\n### {title}\n")
+        out.append("| arch | shape | compute_s | memory_s | collective_s |"
+                   " dominant | useful | GiB/dev | compile_s |")
+        out.append("|---|---|---|---|---|---|---|---|---|")
+        for row in rows:
+            out.append("| " + " | ".join(str(x) for x in row) + " |")
+        if skips:
+            out.append("\nskipped cells (documented, DESIGN.md §4): "
+                       + ", ".join(f"{a}/{s}" for a, s, _ in skips))
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(fmt(sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun_final.json"))

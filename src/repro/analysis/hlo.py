@@ -1,0 +1,424 @@
+"""Custom cost analyzer over optimized per-device HLO text.
+
+XLA's `compiled.cost_analysis()` visits while (= lax.scan) bodies ONCE, so a
+95-layer scanned transformer reports 1/95th of its FLOPs. This module walks
+the computation call graph instead:
+
+  * computations split by brace matching (tuple-typed while params included)
+  * while trip counts read from `backend_config={"known_trip_count":{"n":..}}`
+    (fallback: the largest constant in the condition computation)
+  * per-computation FLOPs from `dot` ops (2 * result_elems * contraction),
+    resolving operand shapes from the computation-local name->shape map
+  * per-computation HBM bytes: sum of operand+result bytes of top-level ops
+    (fusion internals excluded — their intermediates live in registers/VMEM)
+  * collectives with ring wire-cost per device:
+        all-reduce          2 (N-1)/N * bytes
+        reduce-scatter      (N-1)/N * operand bytes (= (N-1) * result bytes)
+        all-gather          (N-1)/N * result bytes
+        all-to-all          (N-1)/N * bytes
+        collective-permute  bytes
+  * total = Sum over computations of (cost * product of enclosing trips)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_RHS_RE = re.compile(
+    r"^(\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+([\w\-]+)\(")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-reduce", "reduce-scatter", "all-gather", "all-to-all",
+                "collective-permute")
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "add-dependency", "domain",
+               "opt-barrier", "partition-id", "replica-id",
+               # control flow: the bodies account for their own traffic
+               "while", "call", "conditional", "async-start", "async-done",
+               "async-update",
+               # TPU semantics: bf16<->f32 element-type converts fuse into
+               # their consumers (MXU takes bf16 operands with f32
+               # accumulation); standalone converts are CPU-backend dot
+               # legalization artifacts and carry no HBM traffic of their own
+               "convert"}
+# ops that read only their (small) result-shaped window of a big operand
+_SLICING = {"dynamic-slice", "slice", "gather"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    result_bytes: int
+    group_size: int
+    multiplier: float = 1.0
+
+    @property
+    def wire_bytes(self) -> float:
+        n = max(self.group_size, 1)
+        rb = self.result_bytes
+        if self.kind == "all-reduce":
+            per = 2 * (n - 1) / n * rb
+        elif self.kind == "reduce-scatter":
+            per = (n - 1) * rb
+        elif self.kind == "all-gather":
+            per = (n - 1) / n * rb
+        elif self.kind == "all-to-all":
+            per = (n - 1) / n * rb
+        else:
+            per = rb
+        return per * self.multiplier
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: List[Collective] = dataclasses.field(default_factory=list)
+    whiles: List[Tuple[str, str, float]] = dataclasses.field(
+        default_factory=list)  # (cond, body, trips)
+    calls: List[str] = dataclasses.field(default_factory=list)
+    fusions: List[Tuple[str, float]] = dataclasses.field(
+        default_factory=list)  # (callee, result bytes)
+    branches: List[str] = dataclasses.field(default_factory=list)
+    max_constant: float = 1.0
+    # param index -> bytes actually read inside (fusion call sites): a param
+    # consumed only through slicing ops contributes its window, not itself
+    param_reads: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # fusion rooted in dynamic-update-slice: written in place (XLA aliases
+    # the buffer inside loops); cost = 2*update window, not the full result
+    root_dus_update_bytes: Optional[float] = None
+    # computation is convert/bitcast-only (CPU dot-legalization artifact)
+    pure_convert: bool = False
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, List[str]], str]:
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    current: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if current is None:
+            if stripped.endswith("{") and ("->" in stripped) and \
+                    (stripped.startswith("%") or stripped.startswith("ENTRY")):
+                name = stripped.split()[1] if stripped.startswith("ENTRY") \
+                    else stripped.split()[0]
+                name = name.lstrip("%")
+                current = name
+                comps[current] = []
+                if stripped.startswith("ENTRY"):
+                    entry = name
+        else:
+            if stripped == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return comps, entry
+
+
+def _parse_computation(name: str, lines: List[str]) -> Computation:
+    comp = Computation(name=name)
+    shapes: Dict[str, str] = {}
+    param_idx: Dict[str, int] = {}
+    # first pass: name -> type string (+ parameter indices)
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            rhs = m.group(2)
+            op_end = rhs.find("(")
+            shapes[m.group(1)] = rhs[:op_end] if op_end > 0 else rhs
+            pm = re.search(r"parameter\((\d+)\)", rhs)
+            if pm:
+                param_idx[m.group(1)] = int(pm.group(1))
+
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        # rhs = "<type> <op>(operands...), attrs" where <type> is either a
+        # single `dtype[dims]{layout}` or a parenthesized tuple type
+        m2 = _RHS_RE.match(rhs)
+        if not m2:
+            continue
+        result_type, op = m2.group(1), m2.group(2)
+        paren = m2.end() - 1  # position of the op's '('
+
+        for c in re.findall(r"constant\((\d+)\)", line):
+            comp.max_constant = max(comp.max_constant, float(c))
+
+        base_op = op.replace("-start", "").replace("-done", "")
+        if base_op in _COLLECTIVES:
+            if op.endswith("-done"):
+                continue
+            gb = _GROUPS_BRACE_RE.search(line)
+            gi = _GROUPS_IOTA_RE.search(line)
+            gsize = (len(gb.group(1).split(",")) if gb
+                     else int(gi.group(2)) if gi else 1)
+            comp.collectives.append(Collective(
+                kind=base_op, result_bytes=_shape_bytes(result_type),
+                group_size=gsize))
+        if op == "while":
+            wm = _WHILE_ATTR_RE.search(line)
+            tm = _TRIP_RE.search(line)
+            if wm:
+                comp.whiles.append((wm.group(1), wm.group(2),
+                                    float(tm.group(1)) if tm else -1.0))
+        elif op in ("call", "async-start"):
+            cm = _CALL_RE.search(line)
+            if cm:
+                comp.calls.append(cm.group(1))
+        elif op == "fusion":
+            cm = _CALL_RE.search(line)
+            if cm:
+                comp.fusions.append((cm.group(1),
+                                     float(_shape_bytes(result_type))))
+        elif op == "conditional":
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                comp.branches.extend(
+                    b.lstrip("%") for b in
+                    re.findall(r"%?([\w\.\-]+)", bm.group(1)))
+
+        # FLOPs: dot ops
+        if op == "dot":
+            cm = _CONTRACT_RE.search(line)
+            operands = re.findall(r"\(%([\w\.\-]+)", rhs[paren:])
+            operands += re.findall(r",\s*%([\w\.\-]+)", rhs[paren:])
+            result_elems = 1
+            for _, dims in _shape_dims(result_type):
+                for d in dims:
+                    result_elems *= d
+                break
+            contract = 1
+            if cm and operands:
+                lhs_type = shapes.get(operands[0], "")
+                dims_list = _shape_dims(lhs_type)
+                if dims_list:
+                    lhs_dims = dims_list[0][1]
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contract *= lhs_dims[int(idx)]
+            comp.flops += 2.0 * result_elems * contract
+
+        # HBM traffic model
+        if op in _NO_TRAFFIC or op.endswith("-done") or op == "fusion":
+            continue  # fusion sites handled after param_reads are known
+        rb = _shape_bytes(result_type)
+        if op in _SLICING:
+            comp.bytes_accessed += 2 * rb      # read window + write result
+            continue
+        if op == "dynamic-update-slice":
+            ops_ = re.findall(r"%([\w\.\-]+)", rhs[paren:])
+            upd = _shape_bytes(shapes.get(ops_[1], "")) if len(ops_) > 1 \
+                else rb
+            comp.bytes_accessed += 2 * upd     # read update + write window
+            continue
+        if op == "scatter":
+            ops_ = re.findall(r"%([\w\.\-]+)", rhs[paren:])
+            upd = _shape_bytes(shapes.get(ops_[2], "")) if len(ops_) > 2 \
+                else rb
+            comp.bytes_accessed += 3 * upd     # read idx+update, write window
+            continue
+        if op in ("broadcast", "iota"):
+            comp.bytes_accessed += rb          # write only
+            continue
+        tb = rb
+        for opnd in re.findall(r"%([\w\.\-]+)", rhs[paren:]):
+            if opnd in shapes:
+                tb += _shape_bytes(shapes[opnd])
+        comp.bytes_accessed += tb
+
+    # classify the computation for fusion call-site costing
+    ops_seen = []
+    for line in lines:
+        m3 = _DEF_RE.match(line)
+        if not m3:
+            continue
+        m4 = _RHS_RE.match(m3.group(2))
+        if not m4:
+            continue
+        op2 = m4.group(2)
+        ops_seen.append(op2)
+        if op2 in ("dynamic-update-slice", "scatter"):
+            # in-place window write (XLA aliases the base buffer): record
+            # the update operand's size, looking through convert/bitcast
+            rhs2 = m3.group(2)
+            ops_ = re.findall(r"%([\w\.\-]+)", rhs2[m4.end() - 1:])
+            idx = 1 if op2 == "dynamic-update-slice" else 2
+            if len(ops_) > idx and ops_[idx] in shapes:
+                comp.root_dus_update_bytes = float(
+                    _shape_bytes(shapes[ops_[idx]]))
+    if ops_seen and all(o in ("parameter", "convert", "bitcast", "copy")
+                        for o in ops_seen):
+        comp.pure_convert = True
+
+    # param read footprint (for fusion call sites): how much of each param
+    # is actually touched inside this computation
+    for pname, idx in param_idx.items():
+        full = _shape_bytes(shapes.get(pname, ""))
+        best: Optional[float] = None
+        pat = re.compile(r"%" + re.escape(pname) + r"\b")
+        for line in lines:
+            m2 = _DEF_RE.match(line)
+            if not m2 or not pat.search(m2.group(2)):
+                continue
+            rhs2 = m2.group(2)
+            mm = _RHS_RE.match(rhs2)
+            if not mm:
+                continue
+            rt, op2 = mm.group(1), mm.group(2)
+            if m2.group(1) == pname:
+                continue  # its own definition line
+            if op2 in _SLICING:
+                r = float(_shape_bytes(rt))
+            elif op2 == "dynamic-update-slice":
+                r = float(full)  # written through: count full
+            else:
+                r = float(full)
+            best = r if best is None else max(best, r)
+        comp.param_reads[idx] = best if best is not None else 0.0
+    return comp
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    flops: float
+    bytes_accessed: float
+    wire_bytes: float
+    by_kind: Dict[str, float]
+    num_collectives_static: int
+    num_collectives_dynamic: float
+    per_computation: Dict[str, Tuple[float, float]]
+
+
+def analyze_text(text: str) -> ModuleCosts:
+    raw, entry = _split_computations(text)
+    comps = {n: _parse_computation(n, ls) for n, ls in raw.items()}
+
+    mult: Dict[str, float] = {}
+    fusion_mult: Dict[str, float] = {}
+
+    def visit_fusion(name: str, m: float):
+        if name not in comps:
+            return
+        fusion_mult[name] = fusion_mult.get(name, 0.0) + m
+        for f, _ in comps[name].fusions:
+            visit_fusion(f, m)
+        for c in comps[name].calls:
+            visit_fusion(c, m)
+
+    def visit(name: str, m: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for cond, body, trips in comp.whiles:
+            if trips < 0:
+                trips = comps.get(cond, Computation(cond)).max_constant
+            visit(cond, m * (trips + 1))
+            visit(body, m * trips)
+        for c in comp.calls:
+            visit(c, m)
+        for b in comp.branches:
+            visit(b, m)
+        # fusion internals: FLOPs counted (dots inside fused computations do
+        # execute) but bytes are NOT (intermediates stay on-chip); call-site
+        # traffic is added below via param_reads
+        for f, _ in comp.fusions:
+            visit_fusion(f, m)
+
+    if entry:
+        visit(entry, 1.0)
+    else:
+        mult = {n: 1.0 for n in comps}
+
+    flops = 0.0
+    byts = 0.0
+    wire = 0.0
+    by_kind: Dict[str, float] = {}
+    n_static, n_dyn = 0, 0.0
+    per_comp: Dict[str, Tuple[float, float]] = {}
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        fm = fusion_mult.get(name, 0.0)
+        if m <= 0 and fm <= 0:
+            continue
+        flops += comp.flops * (m + fm)
+        if m > 0:
+            cb = comp.bytes_accessed
+            for callee, result_bytes in comp.fusions:
+                callee_comp = comps.get(callee)
+                if callee_comp is None:
+                    cb += result_bytes
+                    continue
+                if callee_comp.pure_convert:
+                    continue  # element-type plumbing: no HBM cost on TPU
+                reads = sum(callee_comp.param_reads.values())
+                if callee_comp.root_dus_update_bytes is not None:
+                    upd = callee_comp.root_dus_update_bytes
+                    # in-place DUS: drop the aliased big param + full result
+                    reads = sum(v for v in callee_comp.param_reads.values()
+                                if v < result_bytes * 0.99)
+                    cb += 2 * upd + reads
+                else:
+                    cb += result_bytes + reads
+            byts += cb * m
+            per_comp[name] = (comp.flops * m, cb * m)
+            for c in comp.collectives:
+                wb = dataclasses.replace(c, multiplier=m).wire_bytes
+                wire += wb
+                by_kind[c.kind] = by_kind.get(c.kind, 0.0) + wb
+                n_static += 1
+                n_dyn += m
+    return ModuleCosts(flops=flops, bytes_accessed=byts, wire_bytes=wire,
+                       by_kind=by_kind, num_collectives_static=n_static,
+                       num_collectives_dynamic=n_dyn,
+                       per_computation=per_comp)
+
+
+def collective_summary(text: str) -> Dict:
+    mc = analyze_text(text)
+    return {
+        "total_wire_bytes_per_device": mc.wire_bytes,
+        "by_kind": mc.by_kind,
+        "num_ops_static": mc.num_collectives_static,
+        "num_ops_dynamic": mc.num_collectives_dynamic,
+    }

@@ -1,0 +1,94 @@
+"""Three-term roofline from a compiled (dry-run) artifact.
+
+TPU v5e per chip: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    compute_s    = HLO_FLOPs_per_device / peak_flops
+    memory_s     = HLO_bytes_per_device / hbm_bw
+    collective_s = wire_bytes_per_device / ici_bw
+
+XLA's `cost_analysis()` visits while (scan) bodies once, so all three terms
+come from our own call-graph-walking HLO analyzer (analysis/hlo.py), which
+weights every computation by its enclosing trip counts. MODEL_FLOPS uses
+6*N*D (dense) or 6*N_active*D (MoE), 2*N*D for inference (no backward).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.analysis.hlo import analyze_text
+from repro.configs.base import ModelConfig
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+ICI_LINKS = 2             # ring collectives on a torus axis drive both
+                          # directions -> 2 links active per chip
+ICI_EFF = ICI_BW * ICI_LINKS
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_device: float
+    useful_ratio: float
+    loop_multiplier: float
+    by_kind: Dict[str, float]
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ModelConfig, n_tokens: int, *, train: bool,
+                decode_context: int = 0, seq_len: int = 0) -> float:
+    """6*N*D (train) / 2*N*D (inference) active-param flops + attention."""
+    n = cfg.active_param_count()
+    mult = 6.0 if train else 2.0
+    total = mult * n * n_tokens
+    # attention score/value flops (not in 6ND): 2*2*L*H*dh*S_kv per token
+    if cfg.num_heads:
+        kv = decode_context if decode_context else (seq_len or n_tokens)
+        att = (2 * 2 * cfg.num_layers * cfg.num_heads * cfg.head_dim
+               * n_tokens * kv)
+        if cfg.sliding_window and cfg.local_global_period:
+            # most layers see only the window
+            loc = (cfg.local_global_period - 1) / cfg.local_global_period
+            att = att * (1 - loc) + att * loc * min(
+                1.0, cfg.sliding_window / max(kv, 1))
+        total += (3.0 if train else 1.0) * att / 2  # causal halves it
+    return total
+
+
+def analyze(compiled, lowered_text: Optional[str], cfg: ModelConfig,
+            *, n_devices: int, n_tokens_global: int, train: bool,
+            decode_context: int = 0, seq_len: int = 0) -> Roofline:
+    text = compiled.as_text()
+    mc = analyze_text(text)
+    flops = mc.flops
+    byts = mc.bytes_accessed
+    wire = mc.wire_bytes
+    loop_mult = (mc.num_collectives_dynamic
+                 / max(mc.num_collectives_static, 1))
+
+    mf_global = model_flops(cfg, n_tokens_global, train=train,
+                            decode_context=decode_context, seq_len=seq_len)
+    mf = mf_global / n_devices
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = wire / ICI_EFF
+    dom = max(
+        [("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)], key=lambda kv: kv[1])[0]
+    return Roofline(
+        flops_per_device=flops, bytes_per_device=byts,
+        wire_bytes_per_device=wire, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dom,
+        model_flops_per_device=mf,
+        useful_ratio=mf / flops if flops else 0.0,
+        loop_multiplier=loop_mult, by_kind=mc.by_kind)

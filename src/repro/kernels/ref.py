@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_residual_rmsnorm_ref(x, residual, weight, eps: float = 1e-6):
+    """Oracle for kernels/fused_rmsnorm.py.
+
+    Matches paper Listing 1 lines 23-26 + 34-37 (minus the multimem ld/st):
+        t = x + residual            (x = arriving reduced partial)
+        var = mean(t^2)             (fp32)
+        out = t * rsqrt(var+eps) * weight
+        new_residual = t
+    """
+    xf = x.astype(jnp.float32)
+    rf = residual.astype(jnp.float32)
+    t = xf + rf
+    var = jnp.mean(t * t, axis=-1, keepdims=True)
+    out = t * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype), t.astype(residual.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool, window: int = 0,
+                        q_offset: int = 0, sm_scale: float | None = None):
+    """Oracle for kernels/flash_attention.py.
+
+    q: (Tq, Hq, dh); k, v: (Tk, Hkv, dh). GQA via head repetition.
+    ``q_offset`` is the absolute position of q[0] within the kv context
+    (chunked attention: the suffix split passes offset = len(prefix)).
+    ``window`` > 0 masks keys older than ``window`` positions (sliding).
+    """
+    tq, hq, dh = q.shape
+    tk, hkv, _ = k.shape
+    if sm_scale is None:
+        sm_scale = dh ** -0.5
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * sm_scale
+    qpos = q_offset + jnp.arange(tq)[:, None]
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("hqk,khd->qhd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ring_ar_rmsnorm_ref(shards, residual_shards, weight, eps: float = 1e-6):
+    """Oracle for kernels/ring_ar_rmsnorm.py.
+
+    ``shards``: list of N per-device partial-sum arrays (T, d) (identical
+    shapes); ``residual_shards``: list of N arrays (T//N, d) — each device's
+    private token slice of the residual stream. Returns (list of N identical
+    normed (T, d) outputs, list of N updated residual shards), i.e. the
+    semantics of AllReduce followed by residual+RMSNorm, computed the
+    TokenWeave way (RS -> norm on 1/N tokens -> AG).
+    """
+    n = len(shards)
+    total = sum(s.astype(jnp.float32) for s in shards)
+    t_tokens = total.shape[0]
+    shard_len = t_tokens // n
+    new_residuals, normed_shards = [], []
+    for i in range(n):
+        sl = total[i * shard_len:(i + 1) * shard_len]
+        out, new_r = fused_residual_rmsnorm_ref(
+            sl.astype(shards[0].dtype), residual_shards[i], weight, eps)
+        normed_shards.append(out)
+        new_residuals.append(new_r)
+    full = jnp.concatenate(normed_shards, axis=0)
+    return [full for _ in range(n)], new_residuals

@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) cell, on the single-pod 16x16 mesh
+AND the 2x16x16 multi-pod mesh:
+
+    lowered  = jax.jit(step).lower(**input_specs)   # ShapeDtypeStructs only
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())               # proves it fits
+    print(compiled.cost_analysis())                 # FLOPs/bytes -> roofline
+
+Results are written incrementally to a JSON file so interrupted sweeps
+resume. Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b \
+        --shape train_4k [--multi-pod] [--out runs/dryrun.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool,
+               pcfg_overrides=None, cfg_overrides=None):
+    """Returns (fn, example_inputs, meta) ready for jit(fn).lower(*inputs)."""
+    from repro.configs import get_config
+    from repro.configs.base import ParallelConfig
+    from repro.launch.shapes import SHAPES, cell_applicable, input_specs
+    from repro.models.build import build_model
+    from repro.runtime.sampler import sample
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_step import make_train_step
+
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    skip = cell_applicable(cfg, shape)
+    if skip:
+        return None, None, {"skip": skip}
+
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    tp = mesh.shape["model"]
+    ep = mesh.shape["data"]
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    over = dict(
+        dp_axes=dp_axes,
+        comm_mode="fused",
+        tokenweave=True,
+        seq_shard_kv=shape.long_context,
+        attn_impl="chunked",
+    )
+    over.update(pcfg_overrides or {})
+    pcfg = ParallelConfig(**over)
+    api = build_model(cfg, pcfg, tp=tp, ep=ep)
+    ins = input_specs(cfg, shape, mesh, dp_axes)
+    pspec = api.specs()
+    params_sds = _attach(jax.eval_shape(api.init, jax.random.PRNGKey(0)),
+                         pspec, mesh)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "multi_pod": multi_pod, "n_devices": n_dev,
+            "kind": shape.kind, "seq_len": shape.seq_len,
+            "n_tokens": shape.global_batch * shape.seq_len
+            if shape.kind != "decode" else shape.global_batch,
+            "decode_context": shape.seq_len if shape.kind == "decode" else 0,
+            "train": shape.kind == "train"}
+
+    if shape.kind == "train":
+        from repro.training.train_step import make_train_step
+        ocfg = AdamWConfig()
+        jstep, _ = make_train_step(api, mesh, ins, ocfg,
+                                   dp_size=int(np.prod(
+                                       [mesh.shape[a] for a in dp_axes])))
+        from repro.training.optimizer import init_opt_state, opt_state_specs
+        ospec = opt_state_specs(
+            jax.eval_shape(api.init, jax.random.PRNGKey(0)), pspec,
+            dp_axes, int(np.prod([mesh.shape[a] for a in dp_axes])))
+        opt_sds = _attach(
+            jax.eval_shape(init_opt_state,
+                           jax.eval_shape(api.init, jax.random.PRNGKey(0))),
+            ospec, mesh)
+        return jstep, (params_sds, opt_sds, ins), meta
+
+    bspecs = {k: v.sharding.spec for k, v in ins.items()}
+
+    if shape.kind == "prefill":
+        def fn(params, inputs):
+            if cfg.family == "encdec":
+                logits, kv, _ = api.mod.prefill(
+                    params, inputs, None, cfg=cfg, pcfg=pcfg)
+            else:
+                logits, kv, _ = api.mod.prefill(
+                    params, inputs["tokens"], None, cfg=cfg, pcfg=pcfg,
+                    positions=inputs.get("positions"),
+                    **({k: inputs[k] for k in
+                        ("mrope_positions", "extra_embeds")
+                        if k in inputs}))
+            tok = sample(logits, vocab_size=cfg.vocab_size,
+                         tp_axis=pcfg.tp_axis)
+            return tok, kv
+        sm = jax.shard_map(fn, mesh=mesh, in_specs=(pspec, bspecs),
+                           out_specs=(P(), _kv_out_specs(api, pcfg)),
+                           check_vma=False)
+        return jax.jit(sm), (params_sds, ins), meta
+
+    # decode
+    cache_sds = _attach(
+        jax.eval_shape(lambda: api.init_cache(shape.global_batch,
+                                              shape.seq_len)),
+        _cache_specs_for(api, pcfg, shape), mesh)
+
+    def fn(params, inputs, cache):
+        logits, new_cache = api.mod.decode_step(
+            params, inputs["tokens"], cache, cfg=cfg, pcfg=pcfg,
+            positions=inputs["positions"],
+            **({"mrope_positions": inputs["mrope_positions"]}
+               if "mrope_positions" in inputs else {}))
+        tok = sample(logits, vocab_size=cfg.vocab_size, tp_axis=pcfg.tp_axis)
+        return tok, new_cache
+    cspec = _cache_specs_for(api, pcfg, shape)
+    sm = jax.shard_map(fn, mesh=mesh, in_specs=(pspec, bspecs, cspec),
+                       out_specs=(P(), cspec), check_vma=False)
+    return jax.jit(sm, donate_argnums=(2,)), (params_sds, ins, cache_sds), \
+        meta
+
+
+def _dp_size(mesh, dp_axes):
+    n = 1
+    for a in dp_axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _attach(sds_tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)),
+        sds_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _kv_out_specs(api, pcfg):
+    """Prefill returns (logits-sample, chunk kv) — kv out specs per family."""
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(pcfg.dp_axes)
+    cfg = api.cfg
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import use_scan
+        kv = (P(None, dp, None, "model", None),
+              P(None, dp, None, "model", None), P(None, dp, None))
+        if use_scan(cfg, pcfg):
+            return kv
+        return {f"layer_{i}": tuple(P(*s[1:]) for s in kv)
+                for i in range(cfg.num_layers)}
+    if cfg.family == "ssm":
+        return (P(None, dp, None, "model"), P(None, dp, "model", None))
+    if cfg.family == "hybrid":
+        return {
+            "mamba": ((P(None, dp, None, "model"), P(None, dp, None, None)),
+                      P(None, dp, "model", None, None)),
+            "shared": (P(None, dp, None, "model", None),
+                       P(None, dp, None, "model", None), P(None, dp, None)),
+        }
+    if cfg.family == "encdec":
+        kv = {"k": P(None, dp, None, "model", None),
+              "v": P(None, dp, None, "model", None),
+              "pos": P(None, dp, None)}
+        return {"self": (P(None, dp, None, "model", None),
+                         P(None, dp, None, "model", None), P(None, dp, None)),
+                "cross": dict(kv)}
+    raise KeyError(cfg.family)
+
+
+def _cache_specs_for(api, pcfg, shape):
+    return api.cache_specs(batch1=shape.global_batch == 1)
+
+
+def run_cell(arch, shape_name, *, multi_pod, out_path=None, mesh=None,
+             pcfg_overrides=None, cfg_overrides=None, tag="baseline"):
+    from repro.analysis.roofline import analyze
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import SHAPES
+
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    key = f"{arch}|{shape_name}|{'2x16x16' if multi_pod else '16x16'}|{tag}"
+    try:
+        fn, inputs, meta = build_cell(arch, shape_name, mesh,
+                                      multi_pod=multi_pod,
+                                      pcfg_overrides=pcfg_overrides,
+                                      cfg_overrides=cfg_overrides)
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "tag": tag,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+        print(f"[dryrun] {key} BUILD FAILED: {rec['error']}")
+        _emit(out_path, key, rec)
+        return rec
+    rec = dict(meta, tag=tag, mesh=str(dict(mesh.shape)))
+    if fn is None:
+        rec["status"] = "skipped"
+        _emit(out_path, key, rec)
+        return rec
+    try:
+        if shape_name.startswith("train"):
+            lowered = fn.lower(*inputs)
+        else:
+            lowered = fn.lower(*inputs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        print(ma)
+        ca = compiled.cost_analysis()
+        print({k: ca[k] for k in sorted(ca)[:8]} if ca else ca)
+        from repro.configs import get_config
+        cfg = get_config(arch)
+        roof = analyze(compiled, None, cfg,
+                       n_devices=meta["n_devices"],
+                       n_tokens_global=meta["n_tokens"],
+                       train=meta["train"],
+                       decode_context=meta["decode_context"],
+                       seq_len=meta["seq_len"])
+        rec.update(
+            status="ok", lower_s=round(t1 - t0, 1),
+            compile_s=round(t2 - t1, 1),
+            memory=dict(
+                args=ma.argument_size_in_bytes,
+                out=ma.output_size_in_bytes,
+                temp=ma.temp_size_in_bytes,
+                alias=ma.alias_size_in_bytes,
+                code=ma.generated_code_size_in_bytes),
+            roofline=roof.to_dict())
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] {key} FAILED: {rec['error']}")
+    _emit(out_path, key, rec)
+    return rec
+
+
+def _emit(out_path, key, rec):
+    if not out_path:
+        return
+    data = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            data = json.load(f)
+    rec = dict(rec)
+    rec.pop("traceback", None)
+    data[key] = rec
+    tmp = out_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, default=str)
+    os.replace(tmp, out_path)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default="runs/dryrun.json")
+    p.add_argument("--skip-done", action="store_true")
+    p.add_argument("--tag", default="baseline")
+    args = p.parse_args(argv)
+
+    from repro.configs import ASSIGNED
+    from repro.launch.shapes import SHAPES
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    done = {}
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            done = {k: v for k, v in json.load(f).items()
+                    if v.get("status") in ("ok", "skipped")}
+
+    for mp in meshes:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch in archs:
+            for shape in shapes:
+                key = (f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+                       f"|{args.tag}")
+                if key in done:
+                    print(f"[dryrun] {key}: cached, skipping")
+                    continue
+                print(f"[dryrun] === {key} ===", flush=True)
+                rec = run_cell(arch, shape, multi_pod=mp, out_path=args.out,
+                               mesh=mesh, tag=args.tag)
+                print(f"[dryrun] {key}: {rec['status']} "
+                      f"(lower {rec.get('lower_s')}s, "
+                      f"compile {rec.get('compile_s')}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

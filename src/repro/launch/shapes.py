@@ -1,0 +1,110 @@
+"""Assigned input-shape sets and per-(arch x shape) input_specs().
+
+ShapeDtypeStruct stand-ins only — weak-type-correct, shardable, zero device
+allocation. The four LM shapes:
+
+    train_4k     seq 4096   global_batch 256   -> train_step
+    prefill_32k  seq 32768  global_batch 32    -> serve prefill
+    decode_32k   seq 32768  global_batch 128   -> serve decode (1 new token)
+    long_500k    seq 524288 global_batch 1     -> long-context decode
+
+`long_500k` runs only for bounded-state archs (cfg.supports_long_context);
+see DESIGN.md §4. Family quirks (whisper enc length, VLM patch split) are
+documented inline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    long_context: bool = False
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1,
+                           long_context=True),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the skip reason."""
+    if shape.long_context and not cfg.supports_long_context:
+        return ("pure full-attention arch: 500k decode KV state unbounded "
+                "(DESIGN.md §4)")
+    return None
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, dp_axes) -> Dict:
+    """Model inputs as ShapeDtypeStructs (batch sharded over dp axes)."""
+    b, s = shape.global_batch, shape.seq_len
+    dp = tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0]
+    bspec = P(dp) if b > 1 else P(None)
+    i32 = jnp.int32
+
+    if cfg.family == "encdec":
+        # whisper: seq_len = DECODER length; encoder fixed at the real
+        # 1500-frame mel window (conv frontend stubbed -> embeddings)
+        s_enc = cfg.max_source_positions
+        if shape.kind == "train":
+            return {
+                "frames": _sds((b, s_enc, cfg.d_model), jnp.bfloat16, mesh,
+                               P(dp) if b > 1 else P(None)),
+                "tokens": _sds((b, s), i32, mesh, bspec),
+                "labels": _sds((b, s), i32, mesh, bspec),
+            }
+        if shape.kind == "prefill":
+            return {
+                "frames": _sds((b, s_enc, cfg.d_model), jnp.bfloat16, mesh,
+                               bspec),
+                "tokens": _sds((b, s), i32, mesh, bspec),
+            }
+        return {"tokens": _sds((b, 1), i32, mesh, bspec),
+                "positions": _sds((b, 1), i32, mesh, bspec)}
+
+    if cfg.family == "vlm" and shape.kind != "decode":
+        # dynamic-resolution stub: 1/4 of the context is patch embeddings
+        s_img = s // 4
+        s_txt = s - s_img
+        out = {
+            "tokens": _sds((b, s_txt), i32, mesh, bspec),
+            "extra_embeds": _sds((b, s_img, cfg.d_model), jnp.bfloat16,
+                                 mesh, bspec),
+            "mrope_positions": _sds((b, 3, s), i32, mesh, bspec),
+        }
+        if shape.kind == "train":
+            out["labels"] = _sds((b, s), i32, mesh, bspec)
+        return out
+
+    out = {"tokens": _sds((b, s if shape.kind != "decode" else 1), i32,
+                          mesh, bspec)}
+    if shape.kind == "train":
+        out["labels"] = _sds((b, s), i32, mesh, bspec)
+    if shape.kind == "decode":
+        out["positions"] = _sds((b, 1), i32, mesh, bspec)
+        if cfg.family == "vlm":
+            out["mrope_positions"] = _sds((b, 3, 1), i32, mesh, bspec)
+    if shape.kind == "prefill":
+        out["positions"] = _sds(
+            (b, s if cfg.family != "vlm" else s), i32, mesh, bspec)
+    return out

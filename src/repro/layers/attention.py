@@ -1,0 +1,411 @@
+"""Tensor-parallel GQA attention with chunked (flash-style) execution.
+
+Head layout under TP
+--------------------
+``attention_layout`` decides how query/KV heads map onto the ``tp`` shards of
+the model axis. TP degrees larger than the head count (e.g. gemma3-1b's 4
+heads on a 16-way model axis) are handled by *replication groups*: the head
+shards are replicated ``replicas`` times and the row-parallel output psum is
+pre-scaled by 1/replicas, which keeps the math exact while every shard does
+useful (if partially redundant) work. When ``attn_tp > num_kv_heads``, each
+shard stores exactly one KV head (vLLM-style KV duplication), so the KV cache
+stays sharded as far as the architecture allows.
+
+Implementations
+---------------
+``impl='ref'``      full-score softmax (tests / tiny shapes)
+``impl='chunked'``  lax.scan over q- and kv-blocks with running softmax — the
+                    memory-efficient pure-jnp path used for CPU dry-run
+                    lowering (Pallas cannot lower on the CPU backend)
+``impl='pallas'``   kernels/flash_attention.py (TPU target)
+
+All attention math runs per (batch, head) in fp32 accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.norms import rms_norm
+from repro.layers.rotary import apply_mrope, apply_rope
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnLayout:
+    tp: int            # model-axis size
+    attn_tp: int       # head-sharding degree (divides tp)
+    h_loc: int         # query heads per shard
+    kv_store: int      # KV heads stored per shard
+    replicas: int      # tp // attn_tp (redundant head-shard copies)
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+
+    @property
+    def o_scale(self) -> float:
+        """Pre-psum scale correcting for replicated head shards."""
+        return 1.0 / self.replicas
+
+
+def attention_layout(tp: int, num_heads: int, num_kv_heads: int,
+                     head_dim: int) -> AttnLayout:
+    attn_tp = math.gcd(tp, num_heads)
+    # shrink attn_tp until the GQA grouping divides cleanly
+    while attn_tp > 1:
+        if attn_tp <= num_kv_heads:
+            if num_kv_heads % attn_tp == 0:
+                break
+        else:
+            g = num_heads // num_kv_heads
+            if attn_tp % num_kv_heads == 0 and g % (attn_tp // num_kv_heads) == 0:
+                break
+        attn_tp //= 2
+    h_loc = num_heads // attn_tp
+    kv_store = num_kv_heads // attn_tp if attn_tp <= num_kv_heads else 1
+    return AttnLayout(tp=tp, attn_tp=attn_tp, h_loc=h_loc, kv_store=kv_store,
+                      replicas=tp // attn_tp, num_heads=num_heads,
+                      num_kv_heads=num_kv_heads, head_dim=head_dim)
+
+
+def init_attention_params(key, cfg, tp: int, *, cross: bool = False):
+    """Per-shard-leading-axis weights: every array's axis 0 has size tp."""
+    lay = attention_layout(tp, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
+    d, dh = cfg.d_model, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    dtype = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": (jax.random.normal(k1, (tp, d, lay.h_loc * dh)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (tp, d, lay.kv_store * dh)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (tp, d, lay.kv_store * dh)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (tp, lay.h_loc * dh, d)) * s).astype(dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((tp, lay.h_loc * dh), dtype)
+        p["bk"] = jnp.zeros((tp, lay.kv_store * dh), dtype)
+        p["bv"] = jnp.zeros((tp, lay.kv_store * dh), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((1, dh), dtype)
+        p["k_norm"] = jnp.ones((1, dh), dtype)
+    return p
+
+
+def attention_param_specs(cfg, *, cross: bool = False):
+    from jax.sharding import PartitionSpec as P
+    specs = {k: P("model") for k in ("wq", "wk", "wv", "wo")}
+    if cfg.qkv_bias and not cross:
+        specs.update(bq=P("model"), bk=P("model"), bv=P("model"))
+    if cfg.qk_norm:
+        specs.update(q_norm=P(None), k_norm=P(None))
+    return specs
+
+
+# --------------------------------------------------------------------------
+# core attention math. q: (B, Sq, kvh, g, dh); k/v: (B, Sk, kvh, dh)
+# qpos: (B, Sq) absolute positions; kpos: (B, Sk) absolute positions of keys
+# (-1 marks invalid/unwritten cache slots).
+# --------------------------------------------------------------------------
+
+def _mask(qpos, kpos, causal: bool, window):
+    """window may be a python int or a traced scalar (<=0 means full)."""
+    m = kpos[:, None, :] >= 0
+    if causal:
+        m &= qpos[:, :, None] >= kpos[:, None, :]
+    if isinstance(window, (int, float)):
+        if window > 0:
+            m &= (qpos[:, :, None] - kpos[:, None, :]) < window
+    else:
+        m &= ((qpos[:, :, None] - kpos[:, None, :]) < window) | (window <= 0)
+    return m  # (B, Sq, Sk)
+
+
+def _attn_ref(q, k, v, qpos, kpos, *, causal, window, sm_scale):
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sm_scale
+    mask = _mask(qpos, kpos, causal, window)  # (B, Sq, Sk)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _attn_chunked(q, k, v, qpos, kpos, *, causal, window, sm_scale,
+                  block_q: int, block_kv: int):
+    """Flash-style two-level blocked attention, O(bq*bkv) live scores."""
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, sq)
+    bkv = min(block_kv, sk)
+    pq = (-sq) % bq
+    pk = (-sk) % bkv
+    q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    qpos_p = jnp.pad(qpos, ((0, 0), (0, pq)), constant_values=0)
+    k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    kpos_p = jnp.pad(kpos, ((0, 0), (0, pk)), constant_values=-1)
+    nq, nk = (sq + pq) // bq, (sk + pk) // bkv
+
+    qb = jnp.moveaxis(q.reshape(b, nq, bq, kvh, g, dh), 1, 0)
+    qpb = jnp.moveaxis(qpos_p.reshape(b, nq, bq), 1, 0)
+    kb = jnp.moveaxis(k.reshape(b, nk, bkv, kvh, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, bkv, kvh, dh), 1, 0)
+    kpb = jnp.moveaxis(kpos_p.reshape(b, nk, bkv), 1, 0)
+
+    def q_step(_, qx):
+        qblk, qp = qx  # (b, bq, kvh, g, dh), (b, bq)
+
+        def kv_step(carry, kx):
+            m_run, l_run, acc = carry
+            kblk, vblk, kp = kx
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                                preferred_element_type=jnp.float32) * sm_scale
+            msk = _mask(qp, kp, causal, window)
+            logits = jnp.where(msk[:, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kvh, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, bq, dh), jnp.float32)
+        (m_f, l_f, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kb, vb, kpb))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, jnp.moveaxis(out, 3, 1).astype(q.dtype)  # (b,bq,kvh,g,dh)
+
+    _, outs = lax.scan(q_step, None, (qb, qpb))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq + pq, kvh, g, dh)
+    return out[:, :sq]
+
+
+def multihead_attention(q, k, v, qpos, kpos, *, causal: bool, window: int = 0,
+                        impl: str = "chunked", block_q: int = 512,
+                        block_kv: int = 1024, sm_scale: float | None = None,
+                        interpret: bool = False):
+    """q: (B, Sq, Hq, dh) grouped internally; k/v: (B, Sk, KVh, dh)."""
+    b, sq, hq, dh = q.shape
+    kvh = k.shape[2]
+    g = hq // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    if sm_scale is None:
+        sm_scale = dh ** -0.5
+    if impl == "ref" or (impl == "chunked" and sq * k.shape[1] <= 256 * 256):
+        out = _attn_ref(qg, k, v, qpos, kpos, causal=causal, window=window,
+                        sm_scale=sm_scale)
+    elif impl == "chunked":
+        out = _attn_chunked(qg, k, v, qpos, kpos, causal=causal, window=window,
+                            sm_scale=sm_scale, block_q=block_q,
+                            block_kv=block_kv)
+    elif impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(qg, k, v, qpos, kpos, causal=causal,
+                              window=window, sm_scale=sm_scale,
+                              block_q=block_q, block_kv=block_kv,
+                              interpret=interpret)
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
+    return out.reshape(b, sq, hq, dh)
+
+
+# --------------------------------------------------------------------------
+# layer-level forward (inside shard_map; params carry the per-shard axis 0)
+# --------------------------------------------------------------------------
+
+def _sq(p):
+    return jnp.squeeze(p, axis=0)
+
+
+def _project_qkv(params, x, cfg, lay: AttnLayout, *, positions, theta,
+                 mrope_positions=None):
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    q = jnp.einsum("bsd,df->bsf", x, _sq(params["wq"]))
+    k = jnp.einsum("bsd,df->bsf", x, _sq(params["wk"]))
+    v = jnp.einsum("bsd,df->bsf", x, _sq(params["wv"]))
+    if "bq" in params:
+        q = q + _sq(params["bq"])
+        k = k + _sq(params["bk"])
+        v = v + _sq(params["bv"])
+    q = q.reshape(b, s, lay.h_loc, dh)
+    k = k.reshape(b, s, lay.kv_store, dh)
+    v = v.reshape(b, s, lay.kv_store, dh)
+    if "q_norm" in params:
+        q = rms_norm(q, _sq(params["q_norm"]), cfg.norm_eps)
+        k = rms_norm(k, _sq(params["k_norm"]), cfg.norm_eps)
+    if cfg.mrope_sections and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections, theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections, theta)
+    elif not cfg.learned_positions:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_prefill(params, x, *, positions, cfg, lay: AttnLayout, theta,
+                 causal: bool = True, window: int = 0,
+                 kv_prefix: Optional[Tuple] = None, mrope_positions=None,
+                 impl: str = "chunked", block_q: int = 512,
+                 block_kv: int = 1024, interpret: bool = False):
+    """Returns (partial_out (B,S,d) — pre-psum over TP, (k, v, kpos)).
+
+    ``kv_prefix``: (k, v, kpos) from the prefix token-split — the suffix
+    split's chunked-attention dependency (paper §3.1).
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, lay, positions=positions,
+                           theta=theta, mrope_positions=mrope_positions)
+    kpos = positions
+    if kv_prefix is not None:
+        pk, pv, ppos = kv_prefix
+        k_all = jnp.concatenate([pk, k], axis=1)
+        v_all = jnp.concatenate([pv, v], axis=1)
+        kpos_all = jnp.concatenate([ppos, kpos], axis=1)
+    else:
+        k_all, v_all, kpos_all = k, v, kpos
+    out = multihead_attention(q, k_all, v_all, positions, kpos_all,
+                              causal=causal, window=window, impl=impl,
+                              block_q=block_q, block_kv=block_kv,
+                              interpret=interpret)
+    out = out.reshape(b, s, lay.h_loc * cfg.head_dim)
+    partial = jnp.einsum("bsf,fd->bsd", out, _sq(params["wo"]))
+    if lay.replicas > 1:
+        partial = partial * lay.o_scale
+    return partial, (k, v, kpos)
+
+
+def attn_decode(params, x, cache, *, positions, cfg, lay: AttnLayout, theta,
+                window: int = 0, mrope_positions=None, seq_axis=None):
+    """Single-token decode against a (possibly ring-buffered) KV cache.
+
+    cache: {"k": (B, C, kvh, dh), "v": ..., "pos": (B, C) int32 (-1 = empty)}.
+    C = min(max_len, window) for sliding layers — the ring buffer IS the
+    sliding window. ``seq_axis`` (axis name) enables context-parallel KV:
+    each dp shard owns C_local slots; partial softmax stats are combined with
+    pmax/psum (flash-decoding across chips).
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, x, cfg, lay, positions=positions,
+                                   theta=theta,
+                                   mrope_positions=mrope_positions)
+    c = cache["k"].shape[1]
+    pos = positions[:, 0]  # (B,)
+
+    if seq_axis is None:
+        # rows with pos < 0 are inactive (e.g. still prefilling in another
+        # engine lane): drop their writes instead of clobbering slot c-1
+        slot = jnp.where(pos >= 0, pos % c, c).astype(jnp.int32)
+        bidx = jnp.arange(b)
+        k_c = cache["k"].at[bidx, slot].set(k_new[:, 0], mode="drop")
+        v_c = cache["v"].at[bidx, slot].set(v_new[:, 0], mode="drop")
+        p_c = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32),
+                                              mode="drop")
+    else:
+        # context parallel: slot `pos % (C_local * n)` lives on shard pos//C_local
+        names = (seq_axis,) if isinstance(seq_axis, str) else tuple(seq_axis)
+        n = 1
+        me = jnp.zeros((), jnp.int32)
+        for nm in names:
+            n = n * lax.axis_size(nm)
+            me = me * lax.axis_size(nm) + lax.axis_index(nm)
+        gslot = (pos % (c * n)).astype(jnp.int32)
+        owner = gslot // c
+        lslot = gslot % c
+        mine = (owner == me)[:, None, None]
+        bidx = jnp.arange(b)
+        k_upd = cache["k"].at[bidx, lslot].set(k_new[:, 0])
+        v_upd = cache["v"].at[bidx, lslot].set(v_new[:, 0])
+        p_upd = cache["pos"].at[bidx, lslot].set(pos.astype(jnp.int32))
+        k_c = jnp.where(mine[..., None], k_upd, cache["k"])
+        v_c = jnp.where(mine[..., None], v_upd, cache["v"])
+        p_c = jnp.where(mine[:, :, 0], p_upd, cache["pos"])
+
+    kvh = k_c.shape[2]
+    g = q.shape[2] // kvh
+    qg = q.reshape(b, 1, kvh, g, cfg.head_dim)
+    # bf16 operands + f32 accumulation (MXU-native) — pre-casting the cache
+    # to f32 would round-trip the whole KV through HBM at double width
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_c,
+                        preferred_element_type=jnp.float32) \
+        * (cfg.head_dim ** -0.5)
+    msk = _mask(positions, p_c, True, window)  # (B, 1, C)
+    logits = jnp.where(msk[:, None, None], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    if seq_axis is not None:
+        m = lax.pmax(m, seq_axis)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_c.dtype), v_c,
+                     preferred_element_type=jnp.float32)
+    if seq_axis is not None:
+        # flash-decoding combine across context-parallel shards
+        l = lax.psum(l, seq_axis)
+        acc = lax.psum(acc, seq_axis)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, 1, lay.h_loc * cfg.head_dim)
+    partial = jnp.einsum("bsf,fd->bsd", out.astype(x.dtype), _sq(params["wo"]))
+    if lay.replicas > 1:
+        partial = partial * lay.o_scale
+    return partial, {"k": k_c, "v": v_c, "pos": p_c}
+
+
+def attn_cross(params, x, enc_kv, *, cfg, lay: AttnLayout):
+    """Whisper-style cross attention: q from decoder x, kv precomputed from
+    the encoder output (enc_kv = (k, v, kpos))."""
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    q = jnp.einsum("bsd,df->bsf", x, _sq(params["wq"])).reshape(
+        b, s, lay.h_loc, dh)
+    k, v, kpos = enc_kv
+    qpos = jnp.zeros((b, s), jnp.int32)
+    out = multihead_attention(q, k, v, qpos, kpos, causal=False, impl="ref"
+                              if s * k.shape[1] <= 256 * 256 else "chunked")
+    out = out.reshape(b, s, lay.h_loc * dh)
+    partial = jnp.einsum("bsf,fd->bsd", out, _sq(params["wo"]))
+    if lay.replicas > 1:
+        partial = partial * lay.o_scale
+    return partial
+
+
+def project_cross_kv(params, enc_out, *, cfg, lay: AttnLayout):
+    b, s, _ = enc_out.shape
+    dh = cfg.head_dim
+    k = jnp.einsum("bsd,df->bsf", enc_out, _sq(params["wk"])).reshape(
+        b, s, lay.kv_store, dh)
+    v = jnp.einsum("bsd,df->bsf", enc_out, _sq(params["wv"])).reshape(
+        b, s, lay.kv_store, dh)
+    kpos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return k, v, kpos
+
+
+def init_kv_cache(batch: int, max_len: int, cfg, tp: int, *, window: int = 0,
+                  dtype=None, layers: int | None = None):
+    """GLOBAL-shape KV cache pytree (L, B, C, kv_store*tp, dh) — the head
+    axis shards over the model axis into per-shard kv_store heads (vLLM
+    style KV duplication when kv_heads < tp). ``layers=0`` drops the
+    leading layer axis (per-layer caches for unrolled models)."""
+    lay = attention_layout(tp, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
+    c = min(max_len, window) if window > 0 else max_len
+    l = layers if layers is not None else cfg.num_layers
+    dt = dtype or jnp.dtype(cfg.dtype)
+    lead = () if l == 0 else (l,)
+    h_global = lay.kv_store * tp
+    return {
+        "k": jnp.zeros(lead + (batch, c, h_global, cfg.head_dim), dt),
+        "v": jnp.zeros(lead + (batch, c, h_global, cfg.head_dim), dt),
+        "pos": jnp.full(lead + (batch, c), -1, jnp.int32),
+    }

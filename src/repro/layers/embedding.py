@@ -1,0 +1,105 @@
+"""Vocab-sharded embedding, LM head, and TP-sharded cross-entropy.
+
+The embedding lookup produces *partial* rows (masked gather + psum), which
+slots directly into TokenWeave's fused collective: the model entry point is
+``comm_norm(embed_partial, residual=0, norm1_weights)`` — the very first
+RMSNorm is already token-sharded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.splitting import pad_to_multiple
+
+
+def _sq(p):
+    return jnp.squeeze(p, axis=0)
+
+
+def init_embedding_params(key, cfg, tp: int):
+    v_pad = pad_to_multiple(cfg.vocab_size, tp)
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"embed": (jax.random.normal(k1, (tp, v_pad // tp, d)) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(k2, (tp, d, v_pad // tp))
+                        * d ** -0.5).astype(dtype)
+    return p
+
+
+def embedding_param_specs(cfg):
+    from jax.sharding import PartitionSpec as P
+    specs = {"embed": P("model")}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P("model")
+    return specs
+
+
+def embed_tokens(params, ids, *, tp_axis: str = "model", scale: float = 1.0):
+    """ids: (B, S) -> partial (B, S, d) over TP (complete after psum)."""
+    table = _sq(params["embed"])  # (V_loc, d)
+    v_loc = table.shape[0]
+    lo = lax.axis_index(tp_axis) * v_loc
+    local_ids = ids - lo
+    in_range = (local_ids >= 0) & (local_ids < v_loc)
+    gathered = jnp.take(table, jnp.clip(local_ids, 0, v_loc - 1), axis=0)
+    out = jnp.where(in_range[..., None], gathered, 0.0)
+    return out * scale
+
+
+def lm_head_logits(params, x):
+    """x: (B, S, d) replicated -> local logits (B, S, V_loc)."""
+    if "lm_head" in params:
+        w = _sq(params["lm_head"])            # (d, V_loc)
+        return jnp.einsum("bsd,dv->bsv", x, w)
+    table = _sq(params["embed"])              # (V_loc, d) tied
+    return jnp.einsum("bsd,vd->bsv", x, table)
+
+
+def sharded_softmax_xent(local_logits, labels, *, vocab_size: int,
+                         tp_axis: str = "model", ignore_id: int = -100):
+    """Cross-entropy over vocab-sharded logits.
+
+    local_logits: (B, S, V_loc); labels: (B, S) global ids. Uses the
+    max/psum trick so no shard ever materializes full logits.
+    """
+    v_loc = local_logits.shape[-1]
+    lo = lax.axis_index(tp_axis) * v_loc
+    lg = local_logits.astype(jnp.float32)
+    # mask padded vocab rows (v_pad > vocab_size tail lives on last shard)
+    col = lo + jnp.arange(v_loc)
+    lg = jnp.where((col < vocab_size)[None, None], lg, -jnp.inf)
+    # stability max is non-differentiable plumbing; pmax has no AD rule, so
+    # gather the per-shard maxes (all_gather IS differentiable) instead
+    m_loc = jnp.max(lg, axis=-1)                                  # (B, S)
+    m = lax.stop_gradient(jnp.max(
+        lax.all_gather(m_loc, tp_axis, axis=-1, tiled=False), axis=-1))
+    se = jnp.sum(jnp.exp(lg - m[..., None]), axis=-1)
+    lse = jnp.log(lax.psum(se, tp_axis)) + m
+    local_lab = labels - lo
+    in_range = (local_lab >= 0) & (local_lab < v_loc)
+    picked = jnp.take_along_axis(
+        lg, jnp.clip(local_lab, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+    correct = lax.psum(jnp.where(in_range, picked, 0.0), tp_axis)
+    nll = lse - correct
+    valid = labels != ignore_id
+    nll = jnp.where(valid, nll, 0.0)
+    return jnp.sum(nll), jnp.sum(valid)
+
+
+def sharded_argmax(local_logits, *, vocab_size: int, tp_axis: str = "model"):
+    """Greedy token ids from vocab-sharded logits: (B, S, V_loc) -> (B, S)."""
+    v_loc = local_logits.shape[-1]
+    lo = lax.axis_index(tp_axis) * v_loc
+    lg = local_logits.astype(jnp.float32)
+    col = lo + jnp.arange(v_loc)
+    lg = jnp.where((col < vocab_size)[None, None], lg, -jnp.inf)
+    local_max = jnp.max(lg, axis=-1)
+    local_arg = jnp.argmax(lg, axis=-1) + lo
+    gmax = lax.pmax(local_max, tp_axis)
+    # break ties toward the smallest id (deterministic across shards)
+    cand = jnp.where(local_max >= gmax, local_arg, jnp.iinfo(jnp.int32).max)
+    return lax.pmin(cand.astype(jnp.int32), tp_axis)

@@ -1,0 +1,60 @@
+"""Tensor-parallel FFN: SwiGLU (llama family) or GELU (whisper family).
+
+Column-parallel up/gate, row-parallel down; the output is *partial* over the
+model axis — the reduction is owned by core.fused_collectives.comm_norm so
+the AllReduce can fuse with the residual+RMSNorm (the paper's key op).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _sq(p):
+    return jnp.squeeze(p, axis=0)
+
+
+def init_mlp_params(key, cfg, tp: int, *, d_ff: int | None = None):
+    d = cfg.d_model
+    f = (d_ff or cfg.d_ff)
+    assert f % tp == 0, (f, tp)
+    f_loc = f // tp
+    dtype = jnp.dtype(cfg.dtype)
+    s = d ** -0.5
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("silu", "geglu"):
+        return {
+            "w_gate": (jax.random.normal(ks[0], (tp, d, f_loc)) * s).astype(dtype),
+            "w_up": (jax.random.normal(ks[1], (tp, d, f_loc)) * s).astype(dtype),
+            "w_down": (jax.random.normal(ks[2], (tp, f_loc, d)) * (f ** -0.5)).astype(dtype),
+        }
+    return {
+        "w_in": (jax.random.normal(ks[0], (tp, d, f_loc)) * s).astype(dtype),
+        "b_in": jnp.zeros((tp, f_loc), dtype),
+        "w_out": (jax.random.normal(ks[2], (tp, f_loc, d)) * (f ** -0.5)).astype(dtype),
+        "b_out": jnp.zeros((1, d), dtype),
+    }
+
+
+def mlp_param_specs(cfg):
+    from jax.sharding import PartitionSpec as P
+    if cfg.act in ("silu", "geglu"):
+        return {k: P("model") for k in ("w_gate", "w_up", "w_down")}
+    return {"w_in": P("model"), "b_in": P("model"), "w_out": P("model"),
+            "b_out": P(None)}
+
+
+def mlp_forward(params, x, *, tp_axis: str = "model", act: str = "silu"):
+    """x: (B, S, d) replicated -> partial (B, S, d) over the model axis."""
+    if "w_gate" in params:
+        g = jnp.einsum("bsd,df->bsf", x, _sq(params["w_gate"]))
+        u = jnp.einsum("bsd,df->bsf", x, _sq(params["w_up"]))
+        gf = g.astype(jnp.float32)
+        gact = jax.nn.gelu(gf) if act == "geglu" else jax.nn.silu(gf)
+        h = gact.astype(x.dtype) * u
+        return jnp.einsum("bsf,fd->bsd", h, _sq(params["w_down"]))
+    h = jnp.einsum("bsd,df->bsf", x, _sq(params["w_in"])) + _sq(params["b_in"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", h, _sq(params["w_out"]))
+    # the psum downstream sums tp copies of the bias -> pre-divide
+    return out + _sq(params["b_out"]) / jax.lax.axis_size(tp_axis)

@@ -1,0 +1,224 @@
+"""Mixture-of-Experts with three TP/EP partitionings (see DESIGN.md §3).
+
+    expert : whole experts sharded over the model axis (E % tp == 0).
+             Combine = the layer's TP AllReduce -> TokenWeave's fused
+             AllReduce-RMSNorm applies unchanged. (olmoe)
+    ffn    : every shard holds a d_ff slice of EVERY expert (E < tp,
+             vLLM-style TP MoE). Combine = same TP AllReduce. (mixtral)
+    ep2d   : experts over the `data` axis x d_ff over the `model` axis —
+             the only layout that fits qwen3-moe-235b on v5e. Dispatch and
+             return are all-to-alls over `data`; the returned values are
+             still *partial over model*, so the layer-final fused
+             AllReduce-RMSNorm still performs the reduction (the a2a and the
+             model-axis psum commute). This is the DeepSeek-style EP the
+             paper contrasts with: the a2a itself cannot fuse with the norm.
+
+All dispatch is static-capacity (GShard-style, token dropping beyond
+capacity) so every shape is static under jit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _sq(p):
+    return jnp.squeeze(p, axis=0)
+
+
+def init_moe_params(key, cfg, tp: int, ep: int = 1):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    s = d ** -0.5
+    router = (jax.random.normal(kr, (1, d, e)) * s).astype(jnp.float32)
+    mode = cfg.moe_partition
+    if mode == "expert":
+        assert e % tp == 0, (e, tp)
+        e_loc, f_loc = e // tp, f
+        shard_shape = (tp,)
+    elif mode == "ffn":
+        assert f % tp == 0
+        e_loc, f_loc = e, f // tp
+        shard_shape = (tp,)
+    elif mode == "ep2d":
+        assert e % ep == 0 and f % tp == 0
+        e_loc, f_loc = e // ep, f // tp
+        shard_shape = (ep, tp)
+    else:
+        raise ValueError(mode)
+    def w(k, *shape, scale):
+        return (jax.random.normal(k, shard_shape + shape) * scale).astype(dtype)
+    return {
+        "router": router,
+        "w_gate": w(kg, e_loc, d, f_loc, scale=s),
+        "w_up": w(ku, e_loc, d, f_loc, scale=s),
+        "w_down": w(kd, e_loc, f_loc, d, scale=f ** -0.5),
+    }
+
+
+def moe_param_specs(cfg):
+    from jax.sharding import PartitionSpec as P
+    if cfg.moe_partition == "ep2d":
+        wp = P("data", "model")
+    else:
+        wp = P("model")
+    return {"router": P(None), "w_gate": wp, "w_up": wp, "w_down": wp}
+
+
+def _route(x, router, cfg):
+    """x: (T, d) -> (weights (T,k), ids (T,k), aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), _sq(router))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = lax.top_k(probs, cfg.num_experts_per_tok)
+    if cfg.norm_topk_prob:
+        topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    # load-balancing aux loss (Switch-style): E * sum(f_e * P_e)
+    e = cfg.num_experts
+    ids1 = jax.nn.one_hot(topi[:, 0], e)  # fraction by top-1 assignment
+    f_e = jnp.mean(ids1, axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+    return topw.astype(x.dtype), topi, aux
+
+
+def _capacity_dispatch(x, topi, topw, *, n_local: int, lo: int, capacity: int):
+    """Scatter tokens into per-expert buffers with static capacity.
+
+    Returns (buf (n_local, C, d), slot (T*k,) int32 with -1 for
+    dropped/remote, flat_w (T*k,)).
+    """
+    t, k = topi.shape
+    d = x.shape[-1]
+    flat_e = topi.reshape(-1) - lo
+    flat_w = topw.reshape(-1)
+    local = (flat_e >= 0) & (flat_e < n_local)
+    le = jnp.where(local, flat_e, n_local)          # n_local = trash bin
+    oh = jax.nn.one_hot(le, n_local + 1, dtype=jnp.int32)
+    pos = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=-1) - 1
+    keep = local & (pos < capacity)
+    slot = jnp.where(keep, le * capacity + pos, -1)
+    tok = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((n_local * capacity + 1, d), x.dtype)
+    buf = buf.at[jnp.where(slot >= 0, slot, n_local * capacity)].set(
+        x[tok], mode="drop")
+    # row n_local*capacity collects drops; zero it
+    buf = buf.at[n_local * capacity].set(0.0)
+    return buf[:-1].reshape(n_local, capacity, d), slot, flat_w
+
+
+def _expert_ffn(buf, params, act: str = "silu"):
+    """buf: (E_loc, C, d) -> (E_loc, C, d) via batched expert matmuls."""
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    while wg.ndim > 3:  # strip shard axes (1 or 2 of them)
+        wg, wu, wd = wg[0], wu[0], wd[0]
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _combine(out_buf, slot, flat_w, t: int, k: int):
+    """Gather expert outputs back per assignment and weight-sum over k."""
+    n_local, c, d = out_buf.shape
+    flat = jnp.concatenate(
+        [out_buf.reshape(-1, d), jnp.zeros((1, d), out_buf.dtype)], axis=0)
+    gathered = flat[jnp.where(slot >= 0, slot, n_local * c)]
+    gathered = gathered * flat_w[:, None].astype(gathered.dtype)
+    return jnp.sum(gathered.reshape(t, k, d), axis=1)
+
+
+def moe_forward(params, x, cfg, *, tp_axis: str = "model",
+                ep_axis: str = "data") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) replicated over TP -> (partial out (B,S,d), aux_loss).
+
+    Output is partial over the model axis in ALL modes; the caller's
+    comm_norm performs the reduction (fused with the residual+RMSNorm).
+    """
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    k = cfg.num_experts_per_tok
+    topw, topi, aux = _route(xt, params["router"], cfg)
+    mode = cfg.moe_partition
+
+    if mode in ("expert", "ffn"):
+        tp = lax.axis_size(tp_axis)
+        if mode == "expert":
+            e_loc = cfg.num_experts // tp
+            lo = lax.axis_index(tp_axis) * e_loc
+        else:
+            e_loc, lo = cfg.num_experts, 0
+        cap = int(math.ceil(t * k / cfg.num_experts * cfg.capacity_factor))
+        cap = max(cap, 4)
+        buf, slot, flat_w = _capacity_dispatch(
+            xt, topi, topw, n_local=e_loc, lo=lo, capacity=cap)
+        out_buf = _expert_ffn(buf, params)
+        out = _combine(out_buf, slot, flat_w, t, k)
+        return out.reshape(b, s, d), aux
+
+    if mode != "ep2d":
+        raise ValueError(mode)
+
+    # ---- ep2d: a2a over `ep_axis`, expert d_ff sharded over `tp_axis` ----
+    ep = lax.axis_size(ep_axis)
+    e_loc = cfg.num_experts // ep
+    dest = topi // e_loc                       # destination data-shard
+    cs = int(math.ceil(t * k / ep * cfg.capacity_factor))
+    cs = max(cs, 4)
+    # slot within destination buffers
+    flat_dest = dest.reshape(-1)
+    oh = jax.nn.one_hot(flat_dest, ep, dtype=jnp.int32)
+    pos = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=-1) - 1
+    keep = pos < cs
+    slot = jnp.where(keep, flat_dest * cs + pos, -1)
+    tok = jnp.repeat(jnp.arange(t), k)
+    send_x = jnp.zeros((ep * cs + 1, d), x.dtype)
+    send_x = send_x.at[jnp.where(slot >= 0, slot, ep * cs)].set(xt[tok])
+    send_x = send_x.at[ep * cs].set(0.0)[:-1].reshape(ep, cs, d)
+    send_eid = jnp.full((ep * cs + 1,), -1, jnp.int32)
+    send_eid = send_eid.at[jnp.where(slot >= 0, slot, ep * cs)].set(
+        (topi % e_loc).reshape(-1))
+    send_eid = send_eid.at[ep * cs].set(-1)[:-1].reshape(ep, cs)
+
+    recv_x = lax.all_to_all(send_x, ep_axis, split_axis=0, concat_axis=0,
+                            tiled=True)
+    recv_eid = lax.all_to_all(send_eid, ep_axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+    # local dispatch of received tokens into per-expert buffers
+    rt = ep * cs
+    rx = recv_x.reshape(rt, d)
+    re = recv_eid.reshape(rt)
+    cap2 = int(math.ceil(rt / e_loc * cfg.capacity_factor))
+    valid = re >= 0
+    le = jnp.where(valid, re, e_loc)
+    oh2 = jax.nn.one_hot(le, e_loc + 1, dtype=jnp.int32)
+    pos2 = jnp.sum(jnp.cumsum(oh2, axis=0) * oh2, axis=-1) - 1
+    keep2 = valid & (pos2 < cap2)
+    slot2 = jnp.where(keep2, le * cap2 + pos2, -1)
+    buf = jnp.zeros((e_loc * cap2 + 1, d), x.dtype)
+    buf = buf.at[jnp.where(slot2 >= 0, slot2, e_loc * cap2)].set(rx)
+    buf = buf.at[e_loc * cap2].set(0.0)[:-1].reshape(e_loc, cap2, d)
+
+    out_buf = _expert_ffn(buf, params)        # partial over model (f sliced)
+
+    # return outputs to their arrival slots, then a2a back
+    flat_out = jnp.concatenate(
+        [out_buf.reshape(-1, d), jnp.zeros((1, d), out_buf.dtype)], axis=0)
+    back = flat_out[jnp.where(slot2 >= 0, slot2, e_loc * cap2)]
+    back = jnp.where(keep2[:, None], back, 0.0).reshape(ep, cs, d)
+    reply = lax.all_to_all(back, ep_axis, split_axis=0, concat_axis=0,
+                           tiled=True)
+
+    # combine at home shard (weights never left)
+    flat_reply = jnp.concatenate(
+        [reply.reshape(-1, d), jnp.zeros((1, d), reply.dtype)], axis=0)
+    gathered = flat_reply[jnp.where(slot >= 0, slot, ep * cs)]
+    gathered = gathered * topw.reshape(-1)[:, None].astype(gathered.dtype)
+    out = jnp.sum(gathered.reshape(t, k, d), axis=1)
+    return out.reshape(b, s, d), aux

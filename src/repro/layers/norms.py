@@ -1,0 +1,26 @@
+"""RMSNorm and the (unfused) residual-add + RMSNorm reference path.
+
+All norm math accumulates in float32 regardless of activation dtype (matches
+vLLM's layernorm kernels, which the paper's fused kernel was built on).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def residual_rmsnorm_unfused(x, residual, weight, eps: float = 1e-6):
+    """Two-pass reference: r = residual + x; out = rmsnorm(r).
+
+    This is the baseline memory pattern the paper's fused kernel removes:
+    write r, read r (variance), read r again (scale) -> 2 extra HBM passes.
+    """
+    r = (residual.astype(jnp.float32) + x.astype(jnp.float32)).astype(residual.dtype)
+    return rms_norm(r, weight, eps), r

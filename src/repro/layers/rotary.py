@@ -1,0 +1,48 @@
+"""Rotary position embeddings: standard RoPE, gemma-style dual-theta
+(local/global layers), and Qwen2-VL M-RoPE (multimodal 3D sections)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rope_angles(positions, dim: int, theta):
+    """positions (..., S) -> cos/sin (..., S, dim//2), fp32."""
+    half = dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, dh); positions: (B, S). Rotate-half (llama) convention."""
+    dh = x.shape[-1]
+    cos, sin = _rope_angles(positions, dh, theta)  # (B, S, dh/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta):
+    """Qwen2-VL M-RoPE. positions3: (B, 3, S) — (temporal, height, width)
+    position ids; ``sections`` splits the dh/2 frequency bands, each band
+    using its own position row. Text tokens carry identical t/h/w ids, making
+    M-RoPE degenerate to standard RoPE for them (as in the paper)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # angles per position row: (B, 3, S, half)
+    ang = positions3.astype(jnp.float32)[..., None] * freq
+    rows = []
+    lo = 0
+    for r, sec in enumerate(sections):
+        rows.append(ang[:, r, :, lo:lo + sec])
+        lo += sec
+    ang = jnp.concatenate(rows, axis=-1)  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

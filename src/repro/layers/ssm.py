@@ -1,0 +1,309 @@
+"""State-space layers: Mamba-1 selective scan (falcon-mamba) and Mamba-2 SSD
+(zamba2), tensor-parallel over d_inner / heads.
+
+TokenWeave applicability (DESIGN.md §4): each block ends in a row-parallel
+out_proj whose AllReduce slots into the fused AllReduce-RMSNorm, and all ops
+are token-level except the recurrence itself — the token-split suffix simply
+starts its scan from the prefix's final state (the SSM analogue of the
+chunked-attention KV dependency).
+
+Sharding notes:
+  * mamba1: x_proj (dt/B/C from the sharded inner activation) needs a small
+    psum over TP — (dt_rank + 2*state) per token, ~100x smaller than the
+    d_model AllReduce.
+  * mamba2: B/C are projected straight from the replicated layer input, so
+    no extra collective; only the gated-RMSNorm variance needs a scalar psum.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.norms import rms_norm
+
+
+def _sq(p):
+    return jnp.squeeze(p, axis=0)
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b=None, *, state=None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). state: (B, K-1, C)
+    carry-in from the previous chunk/token. Returns (out, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    if b is not None:
+        out = out + b
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return out, new_state
+
+
+def _ssm_scan_chunked(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t along axis 1; a, b: (B, S, ...); h0 like
+    a[:, 0]. Sequential over chunks, associative within. Returns (h_all, h_f).
+    """
+    bsz, s = a.shape[0], a.shape[1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        a = jnp.concatenate([a, jnp.ones((bsz, pad) + a.shape[2:], a.dtype)], 1)
+        b = jnp.concatenate([b, jnp.zeros((bsz, pad) + b.shape[2:], b.dtype)], 1)
+    n = (s + pad) // q
+    a_c = jnp.moveaxis(a.reshape(bsz, n, q, *a.shape[2:]), 1, 0)
+    b_c = jnp.moveaxis(b.reshape(bsz, n, q, *b.shape[2:]), 1, 0)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    def step(h, xs):
+        ac, bc = xs
+        pa, pb = lax.associative_scan(op, (ac, bc), axis=1)
+        h_all = pa * h[:, None] + pb
+        return h_all[:, -1], h_all
+
+    h_f, ys = lax.scan(step, h0, (a_c, b_c))
+    ys = jnp.moveaxis(ys, 0, 1).reshape(bsz, s + pad, *a.shape[2:])
+    return ys[:, :s], h_f
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba)
+# --------------------------------------------------------------------------
+
+def init_mamba1_params(key, cfg, tp: int):
+    d, di, s_st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, k = cfg.ssm_dt_rank, cfg.ssm_conv
+    assert di % tp == 0
+    dil = di // tp
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    sc = d ** -0.5
+    a_init = jnp.tile(jnp.arange(1, s_st + 1, dtype=jnp.float32)[None],
+                      (dil, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (tp, d, 2 * dil)) * sc).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (tp, k, dil)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((tp, dil), dtype),
+        "x_proj": (jax.random.normal(ks[2], (tp, dil, dtr + 2 * s_st))
+                   * di ** -0.5).astype(dtype),
+        "dt_w": (jax.random.normal(ks[3], (tp, dtr, dil)) * dtr ** -0.5).astype(dtype),
+        "dt_b": jnp.full((tp, dil), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.tile(jnp.log(a_init)[None], (tp, 1, 1)).astype(jnp.float32),
+        "D": jnp.ones((tp, dil), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (tp, dil, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def mamba1_param_specs(cfg):
+    from jax.sharding import PartitionSpec as P
+    return {k: P("model") for k in
+            ("in_proj", "conv_w", "conv_b", "x_proj", "dt_w", "dt_b",
+             "A_log", "D", "out_proj")}
+
+
+def mamba1_forward(params, x, *, cfg, tp_axis: str = "model",
+                   init_state: Tuple | None = None, chunk: int = 256):
+    """x: (B, S, d) replicated -> (partial out (B,S,d), (conv_state, h_state)).
+
+    ``init_state``: (conv_state, h) from a prefix token-split (or decode
+    cache); the suffix resumes the recurrence exactly.
+    """
+    bsz, s, d = x.shape
+    dil = params["conv_b"].shape[-1]
+    s_st = cfg.ssm_state
+    dtr = cfg.ssm_dt_rank
+    conv_st, h0 = init_state if init_state is not None else (None, None)
+
+    xz = jnp.einsum("bsd,de->bse", x, _sq(params["in_proj"]))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    u, conv_st = causal_conv1d(xs, _sq(params["conv_w"]),
+                               _sq(params["conv_b"]), state=conv_st)
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+
+    # dt/B/C from the full inner dim: local partial + small psum over TP
+    dbc = jnp.einsum("bse,ef->bsf", u, _sq(params["x_proj"]))
+    dbc = lax.psum(dbc, tp_axis)
+    dt_in, b_ssm, c_ssm = jnp.split(dbc.astype(jnp.float32),
+                                    [dtr, dtr + s_st], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_in, _sq(params["dt_w"]).astype(jnp.float32))
+        + _sq(params["dt_b"]).astype(jnp.float32))          # (B,S,dil)
+
+    a_mat = -jnp.exp(_sq(params["A_log"]))                  # (dil, state)
+    uf = u.astype(jnp.float32)
+    a_bar = jnp.exp(dt[..., None] * a_mat)                  # (B,S,dil,state)
+    b_bar = (dt * uf)[..., None] * b_ssm[:, :, None, :]     # (B,S,dil,state)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, dil, s_st), jnp.float32)
+    hs, h_f = _ssm_scan_chunked(a_bar, b_bar, h0, chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_ssm)
+    y = y + _sq(params["D"]) * uf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    partial = jnp.einsum("bse,ed->bsd", y, _sq(params["out_proj"]))
+    return partial, (conv_st, h_f)
+
+
+def mamba1_decode(params, x, state, *, cfg, tp_axis: str = "model"):
+    """Single-token step; state = (conv_state (B,K-1,dil), h (B,dil,s))."""
+    out, new_state = mamba1_forward(params, x, cfg=cfg, tp_axis=tp_axis,
+                                    init_state=state, chunk=1)
+    return out, new_state
+
+
+def init_mamba1_state(batch: int, cfg, tp: int, layers: int):
+    """GLOBAL shapes; d_inner shards over the model axis."""
+    di = cfg.d_inner
+    return (
+        jnp.zeros((layers, batch, cfg.ssm_conv - 1, di), jnp.dtype(cfg.dtype)),
+        jnp.zeros((layers, batch, di, cfg.ssm_state), jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2 backbone)
+# --------------------------------------------------------------------------
+
+def init_mamba2_params(key, cfg, tp: int):
+    d, di, s_st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, k = cfg.ssm_heads, cfg.ssm_conv
+    assert di % tp == 0 and nh % tp == 0
+    dil, nhl = di // tp, nh // tp
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    sc = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (tp, d, 2 * dil + nhl)) * sc).astype(dtype),
+        "in_proj_bc": (jax.random.normal(ks[1], (1, d, 2 * s_st)) * sc).astype(dtype),
+        "conv_x": (jax.random.normal(ks[2], (tp, k, dil)) * 0.2).astype(dtype),
+        "conv_bc": (jax.random.normal(ks[3], (1, k, 2 * s_st)) * 0.2).astype(dtype),
+        "A_log": jnp.zeros((tp, nhl), jnp.float32),
+        "D": jnp.ones((tp, nhl), jnp.float32),
+        "dt_bias": jnp.full((tp, nhl), -4.6, jnp.float32),
+        "gate_norm": jnp.ones((tp, dil), dtype),
+        "out_proj": (jax.random.normal(ks[4], (tp, dil, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def mamba2_param_specs(cfg):
+    from jax.sharding import PartitionSpec as P
+    return {"in_proj": P("model"), "in_proj_bc": P(None), "conv_x": P("model"),
+            "conv_bc": P(None), "A_log": P("model"), "D": P("model"),
+            "dt_bias": P("model"), "gate_norm": P("model"),
+            "out_proj": P("model")}
+
+
+def _gated_rmsnorm_tp(y, z, w, eps, tp_axis):
+    """RMSNorm(y * silu(z)) with the variance over the FULL (sharded) di."""
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    ss = lax.psum(jnp.sum(g * g, axis=-1, keepdims=True), tp_axis)
+    n = g.shape[-1] * lax.axis_size(tp_axis)
+    inv = lax.rsqrt(ss / n + eps)
+    return (g * inv * w.astype(jnp.float32)).astype(z.dtype)
+
+
+def mamba2_forward(params, x, *, cfg, tp_axis: str = "model",
+                   init_state: Tuple | None = None, chunk: int = 128):
+    """Chunked SSD. x: (B,S,d) -> (partial (B,S,d), (conv_state, h_state)).
+
+    h_state: (B, nh_loc, dh, state). B/C shared across heads (n_groups=1).
+    """
+    bsz, s, d = x.shape
+    s_st = cfg.ssm_state
+    nhl = params["A_log"].shape[-1]
+    dil = params["gate_norm"].shape[-1]
+    dh = dil // nhl
+    conv_st, h0 = init_state if init_state is not None else (None, None)
+
+    zxdt = jnp.einsum("bsd,de->bse", x, _sq(params["in_proj"]))
+    z, xs, dt_raw = jnp.split(zxdt, [dil, 2 * dil], axis=-1)
+    bc = jnp.einsum("bsd,de->bse", x, _sq(params["in_proj_bc"]))
+    xs, conv_x_st = causal_conv1d(xs, _sq(params["conv_x"]),
+                                  state=None if conv_st is None else conv_st[0])
+    bc, conv_bc_st = causal_conv1d(bc, _sq(params["conv_bc"]),
+                                   state=None if conv_st is None else conv_st[1])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    bc = jax.nn.silu(bc.astype(jnp.float32))
+    b_ssm, c_ssm = jnp.split(bc, 2, axis=-1)               # (B,S,state) fp32
+
+    a_h = -jnp.exp(_sq(params["A_log"]))                   # (nhl,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + _sq(params["dt_bias"]))         # (B,S,nhl)
+    xh = xs.reshape(bsz, s, nhl, dh).astype(jnp.float32)
+
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ssm = jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0)))
+        c_ssm = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+    n = (s + pad) // q
+    xh = jnp.moveaxis(xh.reshape(bsz, n, q, nhl, dh), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(bsz, n, q, nhl), 1, 0)
+    bck = jnp.moveaxis(b_ssm.reshape(bsz, n, q, s_st), 1, 0)
+    cck = jnp.moveaxis(c_ssm.reshape(bsz, n, q, s_st), 1, 0)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nhl, dh, s_st), jnp.float32)
+
+    idx = jnp.arange(q)
+    causal = idx[:, None] >= idx[None, :]
+
+    def step(h, xs_c):
+        xc, dc, bcu, ccu = xs_c                  # (B,q,...)
+        la = dc * a_h                            # log a_t  (B,q,nhl)
+        cum = jnp.cumsum(la, axis=1)             # (B,q,nhl)
+        # intra-chunk (quadratic within chunk)
+        decay = jnp.exp(cum[:, :, None] - cum[:, None, :])      # (B,q,k,nhl)
+        cb = jnp.einsum("bqs,bks->bqk", ccu, bcu)               # (B,q,k)
+        m = cb[..., None] * decay * dc[:, None]                 # (B,q,k,nhl)
+        m = jnp.where(causal[None, :, :, None], m, 0.0)
+        y_intra = jnp.einsum("bqkh,bkhd->bqhd", m, xc)
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bqs,bhds,bqh->bqhd", ccu, h, jnp.exp(cum))
+        # chunk state update
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)               # (B,q,nhl)
+        s_c = jnp.einsum("bkh,bks,bkhd->bhds", dc * decay_end, bcu, xc)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + s_c
+        return h_new, y_intra + y_inter
+
+    h_f, ys = lax.scan(step, h0, (xh, dtc, bck, cck))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s + pad, nhl, dh)[:, :s]
+    y = y + _sq(params["D"])[None, None, :, None] * \
+        xs.reshape(bsz, s, nhl, dh).astype(jnp.float32)
+    y = y.reshape(bsz, s, dil)
+    y = _gated_rmsnorm_tp(y, z, _sq(params["gate_norm"]), cfg.norm_eps, tp_axis)
+    partial = jnp.einsum("bse,ed->bsd", y.astype(x.dtype),
+                         _sq(params["out_proj"]))
+    return partial.astype(x.dtype), ((conv_x_st, conv_bc_st), h_f)
+
+
+def mamba2_decode(params, x, state, *, cfg, tp_axis: str = "model"):
+    return mamba2_forward(params, x, cfg=cfg, tp_axis=tp_axis,
+                          init_state=state, chunk=1)
+
+
+def init_mamba2_state(batch: int, cfg, tp: int, layers: int):
+    """GLOBAL shapes; d_inner / heads shard over the model axis. The B/C
+    conv state is replicated-per-shard (computed identically everywhere),
+    so it carries a leading tp axis sharded over model."""
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    dh = di // nh
+    k = cfg.ssm_conv
+    dt = jnp.dtype(cfg.dtype)
+    return (
+        (jnp.zeros((layers, batch, k - 1, di), dt),
+         jnp.zeros((layers, batch, k - 1, 2 * cfg.ssm_state), dt)),
+        jnp.zeros((layers, batch, nh, dh, cfg.ssm_state), jnp.float32),
+    )

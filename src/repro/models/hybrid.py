@@ -1,0 +1,380 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block
+applied every ``shared_attn_period`` layers (with per-invocation LoRA), per
+arXiv:2411.15242.
+
+Simplifications (recorded in DESIGN.md §6): the shared block is a 2*d-wide
+attention — input = concat(hidden, initial embedding), re-normed by its own
+input norm — projecting back to d; rank-16 LoRA modulates the q projection
+per invocation; placement is uniform every ``period`` layers.
+
+Structure: outer scan over invocation groups (shared block + ``period``
+mamba layers) keeps every shape static without lax.cond; a tail scan covers
+the remainder layers. TokenWeave weaving: the shared attention behaves like
+a dense layer (KV-prefix dependency between splits); mamba blocks pass the
+prefix split's final state to the suffix.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import fused_collectives as fc
+from repro.layers import attention as A
+from repro.layers import embedding as E
+from repro.layers import ssm as S
+from repro.layers.norms import rms_norm
+from repro.models.transformer import _comm_ctx, _decide_split, _entry_norm
+
+LORA_RANK = 16
+
+
+def _n_groups(cfg):
+    p = cfg.shared_attn_period
+    return cfg.num_layers // p, cfg.num_layers % p
+
+
+def _shared_attn_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, d_model=2 * cfg.d_model,
+        head_dim=2 * cfg.d_model // cfg.num_heads, qk_norm=False,
+        qkv_bias=False, mrope_sections=())
+
+
+def init_params(key, cfg: ModelConfig, pcfg: ParallelConfig, tp: int,
+                ep: int = 1):
+    ke, kl, ks, kr = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    n_inv, _ = _n_groups(cfg)
+
+    layers = []
+    for k in jax.random.split(kl, cfg.num_layers):
+        layers.append({
+            "mamba": S.init_mamba2_params(k, cfg, tp),
+            "norm_out": jnp.ones((1, d), dtype),
+        })
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+    acfg = _shared_attn_cfg(cfg)
+    lay = A.attention_layout(tp, acfg.num_heads, acfg.num_kv_heads,
+                             acfg.head_dim)
+    ka_, kb_, kw_ = jax.random.split(kr, 3)
+    shared = {
+        "attn": A.init_attention_params(ks, acfg, tp),
+        "norm_in": jnp.ones((1, 2 * d), dtype),
+        "norm_out": jnp.ones((n_inv, 1, d), dtype),
+        "lora_a": (jax.random.normal(ka_, (n_inv, 1, 2 * d, LORA_RANK))
+                   * 0.01).astype(dtype),
+        "lora_b": jnp.zeros((n_inv, tp, LORA_RANK,
+                             lay.h_loc * acfg.head_dim), dtype),
+    }
+    # out proj maps the shared block back to d (not 2d)
+    shared["attn"]["wo"] = (jax.random.normal(
+        kw_, (tp, lay.h_loc * acfg.head_dim, d)) * (2 * d) ** -0.5).astype(dtype)
+    return {
+        "embedding": E.init_embedding_params(ke, cfg, tp),
+        "norm_first": jnp.ones((1, d), dtype),
+        "layers": layers,
+        "shared": shared,
+    }
+
+
+def param_specs(cfg: ModelConfig, pcfg: ParallelConfig):
+    from jax.sharding import PartitionSpec as P
+    ls = {"mamba": S.mamba2_param_specs(cfg), "norm_out": P(None)}
+    layers = jax.tree.map(lambda s: P(None, *s), ls,
+                          is_leaf=lambda s: isinstance(s, P))
+    acfg = _shared_attn_cfg(cfg)
+    shared = {"attn": A.attention_param_specs(acfg), "norm_in": P(None),
+              "norm_out": P(None, None),
+              "lora_a": P(None, None), "lora_b": P(None, "model")}
+    return {"embedding": E.embedding_param_specs(cfg),
+            "norm_first": P(None), "layers": layers, "shared": shared}
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _mamba_weave(lp, hs, ress, st, *, cfg, ctx, decode, split_batch,
+                 chunk):
+    """One mamba2 layer over all splits; st = cache state or None."""
+    n = len(hs)
+    new_h, new_r, out_states = list(hs), list(ress), []
+    if decode and n == 2:
+        sts = (jax.tree.map(lambda c: c[:split_batch], st),
+               jax.tree.map(lambda c: c[split_batch:], st))
+    else:
+        sts = [st] * n
+    prev_final = None
+    for i in range(n):
+        if not decode and i > 0:
+            init_state = prev_final
+        else:
+            init_state = sts[i]
+        partial, state_i = S.mamba2_forward(
+            lp["mamba"], hs[i], cfg=cfg, tp_axis=ctx.tp_axis,
+            init_state=init_state, chunk=chunk)
+        b, s_, d = hs[i].shape
+        h_flat, new_r[i] = fc.comm_norm(partial.reshape(b * s_, d), ress[i],
+                                        lp["norm_out"][0], ctx=ctx)
+        new_h[i] = h_flat.reshape(b, s_, d)
+        prev_final = state_i
+        out_states.append(state_i)
+    if n == 2:
+        st_out = (jax.tree.map(lambda a, b_: jnp.concatenate([a, b_], 0),
+                               out_states[0], out_states[1])
+                  if decode else out_states[-1])
+    else:
+        st_out = out_states[0]
+    return new_h, new_r, st_out
+
+
+def _shared_weave(shared, lora_a, lora_b, w_out, hs, ress, embs, poss,
+                  cache_inv, *, cfg, pcfg, ctx, decode):
+    acfg = _shared_attn_cfg(cfg)
+    tp = lax.axis_size(ctx.tp_axis)
+    lay = A.attention_layout(tp, acfg.num_heads, acfg.num_kv_heads,
+                             acfg.head_dim)
+    p_eff = dict(shared["attn"])
+    delta = jnp.einsum("dr,rf->df", lora_a[0].astype(jnp.float32),
+                       lora_b[0].astype(jnp.float32)).astype(lora_a.dtype)
+    p_eff["wq"] = shared["attn"]["wq"] + delta[None]
+    n = len(hs)
+    new_h, new_r = list(hs), list(ress)
+    # chunked prefill: earlier chunks' shared-attn KV is the prefix
+    kv_prev = None
+    if not decode and cache_inv is not None:
+        kv_prev = (cache_inv["k"], cache_inv["v"], cache_inv["pos"])
+    kv_outs = []
+    offs = [0]
+    for h_ in hs[:-1]:
+        offs.append(offs[-1] + h_.shape[0])
+    for i in range(n):
+        u = jnp.concatenate([hs[i], embs[i].astype(hs[i].dtype)], axis=-1)
+        u = rms_norm(u, shared["norm_in"][0], cfg.norm_eps)
+        b, s_, _ = u.shape
+        if decode:
+            cl = cache_inv if n == 1 else jax.tree.map(
+                lambda c, o=offs[i], l_=hs[i].shape[0]:
+                    lax.dynamic_slice_in_dim(c, o, l_, axis=0), cache_inv)
+            seq_axis = tuple(pcfg.dp_axes) if pcfg.seq_shard_kv else None
+            a_part, kv = A.attn_decode(p_eff, u, cl, positions=poss[i],
+                                       cfg=acfg, lay=lay,
+                                       theta=cfg.rope_theta,
+                                       seq_axis=seq_axis)
+        else:
+            a_part, kv = A.attn_prefill(
+                p_eff, u, positions=poss[i], cfg=acfg, lay=lay,
+                theta=cfg.rope_theta, kv_prefix=kv_prev, impl=pcfg.attn_impl,
+                block_q=pcfg.attn_block_q, block_kv=pcfg.attn_block_kv)
+            kv_prev = kv if kv_prev is None else tuple(
+                jnp.concatenate([x, y], axis=1) for x, y in zip(kv_prev, kv))
+        kv_outs.append(kv)
+        d = cfg.d_model
+        h_flat, new_r[i] = fc.comm_norm(a_part.reshape(b * s_, d), ress[i],
+                                        w_out, ctx=ctx)
+        new_h[i] = h_flat.reshape(b, s_, d)
+    if n == 1:
+        new_cache = kv_outs[0]
+    elif decode:
+        new_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *kv_outs)
+    else:
+        new_cache = tuple(jnp.concatenate([x, y], axis=1)
+                          for x, y in zip(*kv_outs))
+    return new_h, new_r, new_cache
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
+            positions=None, cache=None, decode: bool = False,
+            return_kv: bool = True, ssm_chunk: int = 128):
+    tp = lax.axis_size(pcfg.tp_axis)
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+    ctx = _comm_ctx(pcfg, cfg, b * s, tp)
+    emb = E.embed_tokens(params["embedding"], tokens, tp_axis=ctx.tp_axis,
+                         scale=cfg.embed_scale)
+    # complete embeddings: reused by every shared-block concat input
+    emb = lax.psum(emb, ctx.tp_axis)
+
+    split = _decide_split(b, s, tp=tp, pcfg=pcfg, decode=decode)
+    split_batch = None
+    if split is not None and not decode:
+        s1, _ = split
+        embs = [emb[:, :s1], emb[:, s1:]]
+        poss = [positions[:, :s1], positions[:, s1:]]
+    elif split is not None and decode:
+        b1, _ = split
+        split_batch = b1
+        embs = [emb[:b1], emb[b1:]]
+        poss = [positions[:b1], positions[b1:]]
+    else:
+        embs, poss = [emb], [positions]
+
+    hs, ress = [], []
+    for e in embs:
+        h_i, r_i = _entry_norm(e / tp, params["norm_first"][0], ctx)
+        hs.append(h_i)
+        ress.append(r_i)
+
+    n_inv, tail = _n_groups(cfg)
+    period = cfg.shared_attn_period
+    head_n = n_inv * period
+
+    def take(tree, sl):
+        return jax.tree.map(lambda a: a[sl], tree)
+
+    lp_head = jax.tree.map(
+        lambda a: a[:head_n].reshape(n_inv, period, *a.shape[1:]),
+        params["layers"])
+    lp_tail = take(params["layers"], slice(head_n, None))
+    shared = params["shared"]
+
+    mcache = None if cache is None else cache["mamba"]
+    scache = None if cache is None else cache["shared"]
+    chunk = 1 if decode else ssm_chunk
+
+    def mamba_scan(hs, ress, lps, mcs):
+        def body(carry, xs):
+            hs, ress = carry
+            if mcs is None:
+                lp, st = xs, None
+            else:
+                lp, st = xs
+            hs, ress, st_out = _mamba_weave(
+                lp, hs, ress, st, cfg=cfg, ctx=ctx, decode=decode,
+                split_batch=split_batch, chunk=chunk)
+            return (hs, ress), st_out
+        bodyfn = body
+        if pcfg.remat and not decode and cache is None:
+            bodyfn = jax.checkpoint(
+                bodyfn, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = lps if mcs is None else (lps, mcs)
+        (hs, ress), sts = lax.scan(bodyfn, (hs, ress), xs)
+        return hs, ress, sts
+
+    def group_body(carry, xs):
+        hs, ress = carry
+        lps, la, lb, w_out, mcs, scs = xs
+        hs, ress, new_sc = _shared_weave(
+            shared, la, lb, w_out[0], hs, ress, embs, poss, scs,
+            cfg=cfg, pcfg=pcfg, ctx=ctx, decode=decode)
+        hs, ress, new_mc = mamba_scan(hs, ress, lps, mcs)
+        return (hs, ress), (new_mc, new_sc)
+
+    # group scan xs
+    mc_head = None if mcache is None else jax.tree.map(
+        lambda a: a[:head_n].reshape(n_inv, period, *a.shape[1:]), mcache)
+    sc_xs = scache if scache is not None else None
+    gb = group_body
+
+    if mcache is None:
+        dummy_mc = jnp.zeros((n_inv,), jnp.int32)
+        dummy_sc = jnp.zeros((n_inv,), jnp.int32)
+
+        def gb_nc(carry, xs):
+            lps, la, lb, w_out, _, _2 = xs
+            hs, ress = carry
+            hs, ress, new_sc = _shared_weave(
+                shared, la, lb, w_out[0], hs, ress, embs, poss, None,
+                cfg=cfg, pcfg=pcfg, ctx=ctx, decode=decode)
+            hs, ress, new_mc = mamba_scan(hs, ress, lps, None)
+            return (hs, ress), (new_mc, new_sc)
+        gfn = gb_nc
+        if pcfg.remat and not decode:
+            gfn = jax.checkpoint(
+                gfn, policy=jax.checkpoint_policies.nothing_saveable)
+        (hs, ress), (mc_out, sc_out) = lax.scan(
+            gfn, (hs, ress),
+            (lp_head, shared["lora_a"], shared["lora_b"], shared["norm_out"],
+             dummy_mc, dummy_sc))
+    else:
+        (hs, ress), (mc_out, sc_out) = lax.scan(
+            gb, (hs, ress),
+            (lp_head, shared["lora_a"], shared["lora_b"], shared["norm_out"],
+             mc_head, sc_xs))
+
+    # tail mamba layers
+    if tail:
+        mc_tail = None if mcache is None else take(
+            mcache, slice(head_n, None))
+        hs, ress, mc_tail_out = mamba_scan(hs, ress, lp_tail, mc_tail)
+    else:
+        mc_tail_out = None
+
+    h_out = jnp.concatenate(hs, axis=0 if decode else 1) \
+        if len(hs) == 2 else hs[0]
+
+    new_cache = None
+    if return_kv or decode:
+        mc_flat = jax.tree.map(
+            lambda a: a.reshape(head_n, *a.shape[2:]), mc_out)
+        if mc_tail_out is not None:
+            mc_flat = jax.tree.map(
+                lambda a, t: jnp.concatenate([a, t], axis=0),
+                mc_flat, mc_tail_out)
+        new_cache = {"mamba": mc_flat, "shared": sc_out}
+    return h_out, new_cache, jnp.zeros((), jnp.float32)
+
+
+def train_loss(params, batch, *, cfg, pcfg, aux_weight: float = 0.0):
+    h, _, aux = forward(params, batch["tokens"], cfg=cfg, pcfg=pcfg,
+                        return_kv=False)
+    logits = E.lm_head_logits(params["embedding"], h)
+    loss_sum, denom = E.sharded_softmax_xent(
+        logits, batch["labels"], vocab_size=cfg.vocab_size,
+        tp_axis=pcfg.tp_axis)
+    return loss_sum, denom, aux
+
+
+def prefill(params, tokens, cache, *, cfg, pcfg, positions=None, **_):
+    h, new_cache, aux = forward(params, tokens, cfg=cfg, pcfg=pcfg,
+                                positions=positions, cache=cache)
+    logits = E.lm_head_logits(params["embedding"], h[:, -1:])
+    return logits, new_cache, aux
+
+
+def decode_step(params, tokens, cache, *, cfg, pcfg, positions=None, **_):
+    h, new_cache, _ = forward(params, tokens, cfg=cfg, pcfg=pcfg,
+                              positions=positions, cache=cache, decode=True)
+    logits = E.lm_head_logits(params["embedding"], h)
+    return logits, new_cache
+
+
+def init_cache(batch: int, max_len: int, cfg: ModelConfig, tp: int):
+    n_inv, _ = _n_groups(cfg)
+    acfg = _shared_attn_cfg(cfg)
+    return {
+        "mamba": S.init_mamba2_state(batch, cfg, tp, cfg.num_layers),
+        "shared": A.init_kv_cache(batch, max_len, acfg, tp, layers=n_inv),
+    }
+
+
+def cache_specs(cfg: ModelConfig, pcfg: ParallelConfig,
+                batch1: bool = False):
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(pcfg.dp_axes)
+    b = None if batch1 else dp
+    if pcfg.seq_shard_kv:
+        shared = {"k": P(None, None, dp, "model", None),
+                  "v": P(None, None, dp, "model", None),
+                  "pos": P(None, None, dp)}
+    else:
+        shared = {"k": P(None, b, None, "model", None),
+                  "v": P(None, b, None, "model", None),
+                  "pos": P(None, b, None)}
+    return {
+        "mamba": ((P(None, b, None, "model"), P(None, b, None, None)),
+                  P(None, b, "model", None, None)),
+        "shared": shared,
+    }

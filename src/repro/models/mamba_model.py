@@ -1,0 +1,179 @@
+"""Falcon-Mamba: attention-free Mamba-1 stack with TokenWeave weaving.
+
+TokenWeave transfers directly (DESIGN.md §4): every block is token-level
+except the recurrence, whose split dependency is the prefix's final
+(conv, ssm) state — the suffix split starts its scan there, exactly like the
+KV-prefix in chunked attention. Each block ends in a row-parallel out_proj,
+so the fused AllReduce-RMSNorm slot appears once per layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import fused_collectives as fc
+from repro.layers import embedding as E
+from repro.layers import ssm as S
+from repro.models.transformer import _comm_ctx, _decide_split, _entry_norm
+
+
+def init_params(key, cfg: ModelConfig, pcfg: ParallelConfig, tp: int,
+                ep: int = 1):
+    ke, kl = jax.random.split(key)
+    dtype = jnp.dtype(cfg.dtype)
+    layers = []
+    for k in jax.random.split(kl, cfg.num_layers):
+        layers.append({
+            "mamba": S.init_mamba1_params(k, cfg, tp),
+            "norm_out": jnp.ones((1, cfg.d_model), dtype),  # next block's norm
+        })
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "embedding": E.init_embedding_params(ke, cfg, tp),
+        "norm_first": jnp.ones((1, cfg.d_model), dtype),
+        "layers": layers,
+    }
+
+
+def param_specs(cfg: ModelConfig, pcfg: ParallelConfig):
+    from jax.sharding import PartitionSpec as P
+    ls = {"mamba": S.mamba1_param_specs(cfg), "norm_out": P(None)}
+    layers = jax.tree.map(lambda s: P(None, *s), ls,
+                          is_leaf=lambda s: isinstance(s, P))
+    return {"embedding": E.embedding_param_specs(cfg),
+            "norm_first": P(None), "layers": layers}
+
+
+def _block(lp, h, res, *, cfg, ctx, init_state, chunk):
+    partial, state = S.mamba1_forward(lp["mamba"], h, cfg=cfg,
+                                      tp_axis=ctx.tp_axis,
+                                      init_state=init_state, chunk=chunk)
+    b, s, d = h.shape
+    h_flat, res = fc.comm_norm(partial.reshape(b * s, d), res,
+                               lp["norm_out"][0], ctx=ctx)
+    return h_flat.reshape(b, s, d), res, state
+
+
+def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
+            positions=None, cache=None, decode: bool = False,
+            return_kv: bool = True, ssm_chunk: int = 256):
+    """Returns (hidden (B,S,d), new_state_cache, aux=0).
+
+    cache: (conv_state (L,B,K-1,dil), ssm_state (L,B,dil,n)) — both the
+    decode state and the chunked-prefill carry.
+    """
+    tp = lax.axis_size(pcfg.tp_axis)
+    b, s = tokens.shape
+    ctx = _comm_ctx(pcfg, cfg, b * s, tp)
+    emb = E.embed_tokens(params["embedding"], tokens, tp_axis=ctx.tp_axis,
+                         scale=cfg.embed_scale)
+    w_first = params["norm_first"][0]
+
+    split = _decide_split(b, s, tp=tp, pcfg=pcfg, decode=decode)
+    if split is not None and not decode:
+        s1, _ = split
+        embs = [emb[:, :s1], emb[:, s1:]]
+    elif split is not None and decode:
+        b1, _ = split
+        embs = [emb[:b1], emb[b1:]]
+        split_batch = b1
+    else:
+        embs = [emb]
+    n = len(embs)
+
+    hs, ress = [], []
+    for e in embs:
+        h_i, r_i = _entry_norm(e, w_first, ctx)
+        hs.append(h_i)
+        ress.append(r_i)
+
+    def body(carry, xs):
+        hs, ress = carry
+        lp, st = xs
+        new_h, new_r, out_states = list(hs), list(ress), []
+        if decode and n == 2:
+            sts = jax.tree.map(lambda c: c[:split_batch], st), \
+                  jax.tree.map(lambda c: c[split_batch:], st)
+        else:
+            sts = [st] * n
+        prev_final = None
+        for i in range(n):
+            if decode or (cache is not None):
+                init_state = sts[i] if (decode or i == 0) else None
+            else:
+                init_state = None
+            if not decode and i > 0:
+                # suffix split resumes from the prefix's final state
+                init_state = prev_final
+            h_i, r_i, state_i = _block(lp, hs[i], ress[i], cfg=cfg, ctx=ctx,
+                                       init_state=init_state,
+                                       chunk=1 if decode else ssm_chunk)
+            new_h[i], new_r[i] = h_i, r_i
+            prev_final = state_i
+            out_states.append(state_i)
+        if n == 2:
+            if decode:
+                st_out = jax.tree.map(lambda a, b_: jnp.concatenate([a, b_], 0),
+                                      out_states[0], out_states[1])
+            else:
+                st_out = out_states[-1]  # final state after both splits
+        else:
+            st_out = out_states[0]
+        return (new_h, new_r), st_out
+
+    if cache is not None:
+        (hs, ress), states = lax.scan(body, (hs, ress),
+                                      (params["layers"], cache))
+    else:
+        def body_nc(carry, lp):
+            # fresh state: mamba1_forward builds zeros when init_state None
+            return body(carry, (lp, None))
+        bodyfn = body_nc
+        if pcfg.remat and not decode:
+            bodyfn = jax.checkpoint(
+                bodyfn, policy=jax.checkpoint_policies.nothing_saveable)
+        (hs, ress), states = lax.scan(bodyfn, (hs, ress), params["layers"])
+
+    h_out = jnp.concatenate(hs, axis=0 if decode else 1) if n == 2 else hs[0]
+    return h_out, states, jnp.zeros((), jnp.float32)
+
+
+def train_loss(params, batch, *, cfg, pcfg, aux_weight: float = 0.0):
+    h, _, aux = forward(params, batch["tokens"], cfg=cfg, pcfg=pcfg,
+                        return_kv=False)
+    logits = E.lm_head_logits(params["embedding"], h)
+    loss_sum, denom = E.sharded_softmax_xent(
+        logits, batch["labels"], vocab_size=cfg.vocab_size,
+        tp_axis=pcfg.tp_axis)
+    return loss_sum, denom, aux
+
+
+def prefill(params, tokens, cache, *, cfg, pcfg, positions=None,
+            last_idx=None, **_):
+    h, states, aux = forward(params, tokens, cfg=cfg, pcfg=pcfg, cache=cache)
+    if last_idx is None:
+        h_last = h[:, -1:]
+    else:
+        h_last = jnp.take_along_axis(h, last_idx[:, None, None], axis=1)
+    logits = E.lm_head_logits(params["embedding"], h_last)
+    return logits, states, aux
+
+
+def decode_step(params, tokens, cache, *, cfg, pcfg, positions=None, **_):
+    h, states, _ = forward(params, tokens, cfg=cfg, pcfg=pcfg, cache=cache,
+                           decode=True)
+    logits = E.lm_head_logits(params["embedding"], h)
+    return logits, states
+
+
+def init_cache(batch: int, max_len: int, cfg: ModelConfig, tp: int):
+    return S.init_mamba1_state(batch, cfg, tp, cfg.num_layers)
+
+
+def cache_specs(cfg: ModelConfig, pcfg: ParallelConfig,
+                batch1: bool = False):
+    from jax.sharding import PartitionSpec as P
+    b = None if batch1 else tuple(pcfg.dp_axes)
+    return (P(None, b, None, "model"), P(None, b, "model", None))

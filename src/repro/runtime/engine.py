@@ -1,0 +1,219 @@
+"""Continuous-batching inference engine (single-host execution; the
+multi-pod serve path is exercised via launch/dryrun.py's serve_step).
+
+Supports the transformer families (dense/moe/vlm) and ssm; hybrid and encdec
+are served via direct serve-step calls (see launch/dryrun.py) — documented
+in DESIGN.md §6.
+
+Per iteration: one decode step over ALL cache slots (inactive slots are
+masked via position -1) and/or one rectangular prefill chunk for a group of
+admitted requests (Sarathi-style chunked prefill, lengths bucketed to bound
+recompilation). TokenWeave activates inside the model whenever the batch
+crosses ``tokenweave_min_tokens``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.build import ModelApi
+from repro.runtime import kv_cache as KC
+from repro.runtime.requests import Request, State
+from repro.runtime.sampler import sample
+from repro.runtime.scheduler import Scheduler, SchedulerConfig
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    completed: int = 0
+
+
+class Engine:
+    def __init__(self, api: ModelApi, mesh, params, scfg: SchedulerConfig,
+                 temperature: float = 0.0):
+        self.api = api
+        self.mesh = mesh
+        self.params = params
+        self.scfg = scfg
+        self.temperature = temperature
+        self.sched = Scheduler(scfg)
+        self.stats = EngineStats()
+        self._step_count = 0
+        self._lengths = np.zeros(scfg.max_batch, np.int64)
+        self._jit_cache: Dict = {}
+
+        cache = api.init_cache(scfg.max_batch, scfg.max_len)
+        cspec = api.cache_specs()
+        self.cache = jax.device_put(
+            cache, jax.tree.map(lambda s: NamedSharding(mesh, s), cspec,
+                                is_leaf=lambda s: isinstance(s, P)))
+        self._cspec = cspec
+        self._pspec = api.specs()
+        self._is_ssm = api.cfg.family == "ssm"
+
+    # ------------------------------------------------------------------
+    # jitted step functions
+    # ------------------------------------------------------------------
+    def _prefill_fn(self, b_sel: int, chunk: int):
+        key = ("prefill", b_sel, chunk)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        api = self.api
+
+        def fn(params, cache, tokens, positions, slot_ids, offsets,
+               last_idx):
+            if self._is_ssm:
+                rows = jax.tree.map(lambda c: c[:, slot_ids], cache)
+                # fresh requests (offset 0) start from zero state
+                fresh = offsets == 0
+
+                def zero_fresh(c):
+                    m = fresh.reshape((1, -1) + (1,) * (c.ndim - 2))
+                    return jnp.where(m, jnp.zeros_like(c), c)
+                rows = jax.tree.map(zero_fresh, rows)
+                logits, new_rows, _ = api.mod.prefill(
+                    params, tokens, rows, cfg=api.cfg, pcfg=api.pcfg,
+                    positions=positions, last_idx=last_idx)
+                new_cache = jax.tree.map(
+                    lambda c, r: c.at[:, slot_ids].set(r), cache, new_rows)
+                # SSM: logits of last *valid* token need a re-run on unpadded
+                # length; we instead require ssm chunks to be unpadded
+                tok = sample(logits, vocab_size=api.cfg.vocab_size,
+                             tp_axis=api.pcfg.tp_axis,
+                             temperature=self.temperature)
+                return tok, new_cache
+            rows = KC.gather_slots(cache, slot_ids)
+            logits, kv, _ = api.mod.prefill(
+                params, tokens, rows, cfg=api.cfg, pcfg=api.pcfg,
+                positions=positions, last_idx=last_idx)
+            new_cache = KC.insert_chunk(cache, kv, offsets, slot_ids)
+            tok = sample(logits, vocab_size=api.cfg.vocab_size,
+                         tp_axis=api.pcfg.tp_axis,
+                         temperature=self.temperature)
+            return tok, new_cache
+
+        sm = jax.shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self._pspec, self._cspec, P(), P(), P(), P(), P()),
+            out_specs=(P(), self._cspec), check_vma=False)
+        jfn = jax.jit(sm, donate_argnums=(1,))
+        self._jit_cache[key] = jfn
+        return jfn
+
+    def _decode_fn(self):
+        key = ("decode",)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        api = self.api
+
+        def fn(params, cache, tokens, positions):
+            logits, new_cache = api.mod.decode_step(
+                params, tokens, cache, cfg=api.cfg, pcfg=api.pcfg,
+                positions=positions)
+            tok = sample(logits, vocab_size=api.cfg.vocab_size,
+                         tp_axis=api.pcfg.tp_axis,
+                         temperature=self.temperature)
+            return tok, new_cache
+
+        sm = jax.shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self._pspec, self._cspec, P(), P()),
+            out_specs=(P(), self._cspec), check_vma=False)
+        jfn = jax.jit(sm, donate_argnums=(1,))
+        self._jit_cache[key] = jfn
+        return jfn
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request):
+        req.arrival_step = self._step_count
+        self.sched.add(req)
+
+    def step(self) -> bool:
+        """Run one engine iteration. Returns False when idle."""
+        plan = self.sched.next_step()
+        if plan is None:
+            return False
+        self._step_count += 1
+        self.stats.steps += 1
+
+        if plan.prefill is not None:
+            self._run_prefill(*plan.prefill)
+        if plan.decode_slots:
+            self._run_decode(plan.decode_slots)
+        return True
+
+    def run(self, max_steps: int = 100000) -> List[Request]:
+        while not self.sched.all_done() and max_steps > 0:
+            max_steps -= 1
+            if not self.step():
+                break
+        return self.sched.finished
+
+    # ------------------------------------------------------------------
+    def _run_prefill(self, group: List[Request], chunk: int):
+        b_sel = len(group)
+        if self._is_ssm:
+            # ssm chunks must be exact (no pads): shrink to min remainder
+            chunk = min(min(len(r.prompt) - r.prefill_pos for r in group),
+                        chunk)
+        tokens = np.zeros((b_sel, chunk), np.int32)
+        positions = np.full((b_sel, chunk), -1, np.int32)
+        offsets = np.zeros(b_sel, np.int32)
+        last_idx = np.zeros(b_sel, np.int32)
+        for i, r in enumerate(group):
+            take = min(chunk, len(r.prompt) - r.prefill_pos)
+            tokens[i, :take] = r.prompt[r.prefill_pos:r.prefill_pos + take]
+            positions[i, :take] = np.arange(r.prefill_pos,
+                                            r.prefill_pos + take)
+            offsets[i] = r.prefill_pos
+            last_idx[i] = take - 1
+            r.prefill_pos += take
+        slot_ids = np.array([r.slot for r in group], np.int32)
+
+        fn = self._prefill_fn(b_sel, chunk)
+        tok, self.cache = fn(self.params, self.cache, jnp.asarray(tokens),
+                             jnp.asarray(positions), jnp.asarray(slot_ids),
+                             jnp.asarray(offsets), jnp.asarray(last_idx))
+        tok = np.asarray(tok)
+        self.stats.prefill_tokens += int((positions >= 0).sum())
+        for i, r in enumerate(group):
+            self._lengths[r.slot] = r.prefill_pos
+            if r.prefill_done:
+                r.output.append(int(tok[i]))
+                r.first_token_step = self._step_count
+                r.state = State.DECODE
+                self._lengths[r.slot] += 0  # first output not yet in cache
+                self._maybe_finish(r)
+
+    def _run_decode(self, slots: List[int]):
+        bmax = self.scfg.max_batch
+        tokens = np.zeros((bmax, 1), np.int32)
+        positions = np.full((bmax, 1), -1, np.int32)
+        for r in self.sched.active:
+            if r is not None and r.state == State.DECODE:
+                tokens[r.slot, 0] = r.output[-1]
+                positions[r.slot, 0] = r.length - 1
+        fn = self._decode_fn()
+        tok, self.cache = fn(self.params, self.cache, jnp.asarray(tokens),
+                             jnp.asarray(positions))
+        tok = np.asarray(tok)
+        self.stats.decode_tokens += len(slots)
+        for r in list(self.sched.active):
+            if r is not None and r.state == State.DECODE:
+                r.output.append(int(tok[r.slot]))
+                self._maybe_finish(r)
+
+    def _maybe_finish(self, r: Request):
+        if len(r.output) >= r.max_new_tokens:
+            self.sched.finish(r, self._step_count)
+            self.stats.completed += 1

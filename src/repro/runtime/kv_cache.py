@@ -1,0 +1,94 @@
+"""KV-cache slot management: static-shape caches with per-request slots and
+ring-buffer (sliding-window) insertion.
+
+JAX requires static shapes, so instead of vLLM's dynamically allocated pages
+we preallocate (L, B_slots, C, kvh, dh) and emulate the block-table
+indirection with gathers over slot ids. Sliding-window layers allocate
+C = window and wrap via modular slot arithmetic (the ring buffer IS the
+window — see layers/attention.attn_decode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _stacked(cache) -> bool:
+    """Stacked (L, B, ...) cache vs per-layer dict {layer_i: {...}}."""
+    return "k" in cache
+
+
+def insert_chunk(cache, kv_chunk, offsets, slot_ids=None):
+    """Insert a prefill chunk's KV into the cache.
+
+    stacked: cache {"k": (L,B,C,h,dh), ...}; kv_chunk (k,v,pos) with L axis.
+    unrolled: cache {"layer_i": {"k": (B,C,h,dh), ...}}; kv_chunk
+    {"layer_i": (k,v,pos)} without the L axis (ring-buffer windows differ
+    per layer, so slots are computed per layer).
+    """
+    if not _stacked(cache):
+        return {name: _insert_layer(cache[name], kv_chunk[name], offsets,
+                                    slot_ids)
+                for name in cache}
+    k, v, pos = kv_chunk
+    _, b_sel, s = pos.shape
+    c = cache["k"].shape[2]
+    if slot_ids is None:
+        slot_ids = jnp.arange(b_sel)
+    bidx = slot_ids[:, None]
+    # segment-wise so a chunk longer than a ring window writes in order,
+    # and pad entries (pos < 0, bucketing) are dropped instead of
+    # clobbering live in-window slots
+    for lo in range(0, s, c):
+        ks, vs, ps = (k[:, :, lo:lo + c], v[:, :, lo:lo + c],
+                      pos[:, :, lo:lo + c])
+        seg = ps.shape[2]
+        slots = (offsets[:, None] + lo + jnp.arange(seg)[None, :]) % c
+        slots = jnp.where(ps[0] >= 0, slots, c)          # OOB -> dropped
+        cache = {
+            "k": cache["k"].at[:, bidx, slots].set(ks, mode="drop"),
+            "v": cache["v"].at[:, bidx, slots].set(vs, mode="drop"),
+            "pos": cache["pos"].at[:, bidx, slots].set(ps, mode="drop"),
+        }
+    return cache
+
+
+def _insert_layer(layer, kv, offsets, slot_ids):
+    k, v, pos = kv
+    b_sel, s = pos.shape
+    c = layer["k"].shape[1]
+    if slot_ids is None:
+        slot_ids = jnp.arange(b_sel)
+    bidx = slot_ids[:, None]
+    for lo in range(0, s, c):
+        ks, vs, ps = k[:, lo:lo + c], v[:, lo:lo + c], pos[:, lo:lo + c]
+        seg = ps.shape[1]
+        slots = (offsets[:, None] + lo + jnp.arange(seg)[None, :]) % c
+        slots = jnp.where(ps >= 0, slots, c)
+        layer = {"k": layer["k"].at[bidx, slots].set(ks, mode="drop"),
+                 "v": layer["v"].at[bidx, slots].set(vs, mode="drop"),
+                 "pos": layer["pos"].at[bidx, slots].set(ps, mode="drop")}
+    return layer
+
+
+def gather_slots(cache, slot_ids):
+    """View of the cache rows for the given slots (same tree structure)."""
+    if not _stacked(cache):
+        return jax.tree.map(lambda c: c[slot_ids], cache)
+    return jax.tree.map(lambda c: c[:, slot_ids], cache)
+
+
+def scatter_slots(cache, rows, slot_ids):
+    """Write per-slot rows back into the full cache."""
+    if not _stacked(cache):
+        return jax.tree.map(lambda c, r: c.at[slot_ids].set(r), cache, rows)
+    return jax.tree.map(lambda c, r: c.at[:, slot_ids].set(r), cache, rows)
+
+
+def reset_slots(cache, slot_ids):
+    """Invalidate slots (release finished requests): pos = -1."""
+    if not _stacked(cache):
+        return {name: dict(l, pos=l["pos"].at[slot_ids].set(-1))
+                for name, l in cache.items()}
+    new_p = cache["pos"].at[:, slot_ids].set(-1)
+    return dict(cache, pos=new_p)

@@ -1,0 +1,63 @@
+"""Request lifecycle + synthetic workload traces (fixed-length and
+ShareGPT-like mixed-length conversations)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import random
+from typing import List, Optional
+
+
+class State(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    state: State = State.WAITING
+    slot: Optional[int] = None
+    prefill_pos: int = 0              # tokens already prefilled
+    output: List[int] = dataclasses.field(default_factory=list)
+    arrival_step: int = 0
+    first_token_step: Optional[int] = None
+    done_step: Optional[int] = None
+
+    @property
+    def length(self) -> int:
+        return self.prefill_pos + len(self.output)
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefill_pos >= len(self.prompt)
+
+
+def fixed_trace(n_requests: int, input_len: int, output_len: int,
+                vocab: int, seed: int = 0) -> List[Request]:
+    rng = random.Random(seed)
+    return [Request(rid=i,
+                    prompt=[rng.randrange(vocab) for _ in range(input_len)],
+                    max_new_tokens=output_len)
+            for i in range(n_requests)]
+
+
+def sharegpt_like_trace(n_requests: int, vocab: int, seed: int = 0,
+                        mean_in: int = 161, mean_out: int = 338,
+                        max_in: int = 1024, max_out: int = 1024
+                        ) -> List[Request]:
+    """Log-normal-ish length mix matching the ShareGPT summary stats the
+    serving literature reports (mean input ~161, mean output ~338)."""
+    rng = random.Random(seed)
+    reqs = []
+    for i in range(n_requests):
+        ilen = min(max_in, max(1, int(rng.lognormvariate(4.4, 1.0))))
+        olen = min(max_out, max(1, int(rng.lognormvariate(5.2, 0.9))))
+        reqs.append(Request(
+            rid=i, prompt=[rng.randrange(vocab) for _ in range(ilen)],
+            max_new_tokens=olen))
+    return reqs

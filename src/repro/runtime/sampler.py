@@ -1,0 +1,29 @@
+"""Token sampling over vocab-sharded logits (inside shard_map)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.embedding import sharded_argmax
+
+
+def sample(local_logits, *, vocab_size: int, tp_axis: str = "model",
+           temperature: float = 0.0, key=None):
+    """local_logits: (B, 1, V_loc) -> token ids (B,).
+
+    temperature == 0 -> greedy (deterministic tie-break). Stochastic sampling
+    uses the Gumbel-max trick so it composes with the sharded argmax without
+    materializing full logits on any shard.
+    """
+    if temperature <= 0.0:
+        return sharded_argmax(local_logits, vocab_size=vocab_size,
+                              tp_axis=tp_axis)[:, 0]
+    v_loc = local_logits.shape[-1]
+    lo = lax.axis_index(tp_axis) * v_loc
+    # per-shard fold of the key keeps gumbels iid across the global vocab
+    shard_key = jax.random.fold_in(key, lax.axis_index(tp_axis))
+    g = jax.random.gumbel(shard_key, local_logits.shape, jnp.float32)
+    perturbed = local_logits.astype(jnp.float32) / temperature + g
+    return sharded_argmax(perturbed, vocab_size=vocab_size,
+                          tp_axis=tp_axis)[:, 0]

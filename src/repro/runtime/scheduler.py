@@ -1,0 +1,96 @@
+"""Iteration-level scheduler with Sarathi-style chunked prefill.
+
+Each engine iteration the scheduler emits:
+  * a decode batch: one token for every DECODE-state request (if any), and
+  * a prefill chunk: up to ``chunk_tokens`` tokens from WAITING/PREFILL
+    requests with equal chunk lengths (rectangular batches keep shapes
+    static; lengths are bucketed to powers of two to bound recompilation).
+
+The two are dispatched as two forward calls per iteration (documented
+simplification vs. packed ragged hybrid batches, DESIGN.md §6). TokenWeave
+is applied inside the model per batch: chunks >= ``tokenweave_min_tokens``
+take the two-split weave; small decode batches fall back to the unsplit
+fused kernel — the same policy the paper uses for vLLM integration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.runtime.requests import Request, State
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch: int = 8              # cache slots
+    chunk_tokens: int = 2048        # Sarathi chunk budget (vLLM default 2k)
+    max_len: int = 4096
+    prefill_bucket: int = 64        # chunk lengths rounded to this multiple
+
+
+@dataclasses.dataclass
+class ScheduleStep:
+    decode_slots: List[int]
+    prefill: Optional[Tuple[List[Request], int]]  # (requests, chunk_len)
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.waiting: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * cfg.max_batch
+        self.finished: List[Request] = []
+
+    # ---- admission -------------------------------------------------------
+    def add(self, req: Request):
+        self.waiting.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def _admit(self):
+        for slot in self._free_slots():
+            if not self.waiting:
+                break
+            req = self.waiting.pop(0)
+            req.slot = slot
+            req.state = State.PREFILL
+            self.active[slot] = req
+
+    # ---- one iteration ----------------------------------------------------
+    def next_step(self) -> Optional[ScheduleStep]:
+        self._admit()
+        decode_slots = [r.slot for r in self.active
+                        if r is not None and r.state == State.DECODE]
+
+        prefilling = [r for r in self.active
+                      if r is not None and r.state == State.PREFILL]
+        prefill = None
+        if prefilling:
+            budget = self.cfg.chunk_tokens
+            b = self.cfg.prefill_bucket
+            # chunk length: bucketized max remaining, capped by the budget
+            remains = [len(r.prompt) - r.prefill_pos for r in prefilling]
+            chunk = min(budget, max(remains))
+            chunk = min(max(b, ((chunk + b - 1) // b) * b), budget)
+            group, n_tok = [], 0
+            for r in prefilling:
+                if n_tok + chunk > budget and group:
+                    break
+                group.append(r)
+                n_tok += chunk
+            prefill = (group, chunk)
+
+        if not decode_slots and prefill is None:
+            return None
+        return ScheduleStep(decode_slots=decode_slots, prefill=prefill)
+
+    # ---- bookkeeping ------------------------------------------------------
+    def finish(self, req: Request, step: int):
+        req.state = State.DONE
+        req.done_step = step
+        self.active[req.slot] = None
+        self.finished.append(req)
+
+    def all_done(self) -> bool:
+        return not self.waiting and all(r is None for r in self.active)

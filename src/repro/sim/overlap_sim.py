@@ -1,0 +1,225 @@
+"""Two-stream (compute / comm) event simulator for the TokenWeave schedule.
+
+The CPU container cannot measure TPU wall time, so the paper's latency
+figures are reproduced analytically: per-op durations derive from the same
+roofline terms the dry-run reports (flops/peak, bytes/HBM-bw, wire/ICI-bw
+on v5e), and the schedule is executed by a dependency-respecting
+list scheduler with one compute stream and one comm stream — the XLA
+latency-hiding scheduler's idealization. Wave quantization is modeled by
+rounding compute tokens up to the tile unit, which is what makes
+smart-splitting matter (paper Fig. 9).
+
+Modes (match core.fused_collectives + the weave):
+    vanilla    serial: AR -> unfused add+norm on every device
+    reordered  serial: RS -> add+norm(1/N) -> AG, unfused ops
+    fuseonly   serial: fused RS+norm+AG kernel (paper TokenWeave-fuseonly)
+    tokenweave fused kernel + two-split overlap    (paper full TokenWeave)
+    nocomm     collectives removed (paper vllm-nocomm counterfactual)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.roofline import HBM_BW, ICI_EFF, PEAK_FLOPS
+from repro.configs.base import ModelConfig
+from repro.core.splitting import smart_split, naive_split
+
+BYTES = 2  # bf16
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    stream: str                  # "compute" | "comm"
+    duration: float
+    deps: Tuple[str, ...] = ()
+
+
+def simulate(ops: List[Op]) -> Tuple[float, Dict[str, Tuple[float, float]]]:
+    """List-schedule ops on two serial streams; returns (makespan, spans)."""
+    done: Dict[str, float] = {}
+    spans: Dict[str, Tuple[float, float]] = {}
+    stream_free = {"compute": 0.0, "comm": 0.0}
+    pending = list(ops)
+    while pending:
+        progressed = False
+        for op in list(pending):
+            if all(d in done for d in op.deps):
+                start = max(stream_free[op.stream],
+                            max((done[d] for d in op.deps), default=0.0))
+                end = start + op.duration
+                stream_free[op.stream] = end
+                done[op.name] = end
+                spans[op.name] = (start, end)
+                pending.remove(op)
+                progressed = True
+        if not progressed:
+            raise RuntimeError("dependency cycle in schedule")
+    return max(done.values(), default=0.0), spans
+
+
+# --------------------------------------------------------------------------
+# per-op cost models (per device, v5e)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HW:
+    peak: float = PEAK_FLOPS
+    hbm: float = HBM_BW
+    ici: float = ICI_EFF            # bidirectional ring on a torus axis
+    tile: int = 256                 # token tile (wave quantum)
+    mfu_cap: float = 0.6            # achievable fraction of peak on GEMMs
+
+
+def _quantize(t: int, hw: HW) -> int:
+    return max(hw.tile, math.ceil(t / hw.tile) * hw.tile)
+
+
+def t_gemm(tokens: int, flops_per_token: float, weight_bytes: float,
+           hw: HW) -> float:
+    tq = _quantize(tokens, hw)
+    f = flops_per_token * tq
+    return max(f / (hw.peak * hw.mfu_cap),
+               (weight_bytes + tq * 0) / hw.hbm)
+
+
+def t_attn_layer(cfg: ModelConfig, tokens: int, ctx: int, tp: int,
+                 hw: HW) -> float:
+    """QKV+O projections + scores/values for `tokens` new tokens vs ctx."""
+    d, dh = cfg.d_model, cfg.head_dim
+    h_loc = max(cfg.num_heads // tp, 1)
+    kv_loc = max(cfg.num_kv_heads // tp, 1)
+    proj_flops = 2 * d * (h_loc + 2 * kv_loc) * dh + 2 * h_loc * dh * d
+    attn_flops = 4 * h_loc * dh * ctx / 2          # causal
+    w_bytes = (d * (h_loc + 2 * kv_loc) * dh + h_loc * dh * d) * BYTES
+    kv_bytes = 2 * ctx * kv_loc * dh * BYTES       # stream KV once (flash)
+    tq = _quantize(tokens, hw)
+    f = (proj_flops + attn_flops) * tq
+    return max(f / (hw.peak * hw.mfu_cap), (w_bytes + kv_bytes) / hw.hbm)
+
+
+def t_ffn_layer(cfg: ModelConfig, tokens: int, tp: int, hw: HW) -> float:
+    d = cfg.d_model
+    if cfg.is_moe:
+        f_loc = cfg.moe_d_ff * cfg.num_experts_per_tok
+        mult = 3
+        w_bytes = 3 * d * cfg.moe_d_ff * BYTES * max(
+            cfg.num_experts // tp, 1)              # expert weights streamed
+    else:
+        f_loc = cfg.d_ff // tp
+        mult = 3 if cfg.act in ("silu", "geglu") else 2
+        w_bytes = mult * d * f_loc * BYTES
+    flops_per_tok = 2 * mult * d * (f_loc if not cfg.is_moe else
+                                    f_loc // tp)
+    tq = _quantize(tokens, hw)
+    return max(flops_per_tok * tq / (hw.peak * hw.mfu_cap), w_bytes / hw.hbm)
+
+
+def t_allreduce(tokens: int, d: int, n: int, hw: HW) -> float:
+    return 2 * (n - 1) / n * tokens * d * BYTES / hw.ici
+
+
+def t_rs_or_ag(tokens: int, d: int, n: int, hw: HW) -> float:
+    return (n - 1) / n * tokens * d * BYTES / hw.ici
+
+
+def t_norm(tokens: int, d: int, hw: HW, *, fused: bool) -> float:
+    """unfused residual+norm: write r, read r twice, write out (+reads);
+    fused single pass: read x + res, write r' + out."""
+    passes = 5 if not fused else 4
+    return passes * tokens * d * BYTES / hw.hbm
+
+
+# --------------------------------------------------------------------------
+# schedules
+# --------------------------------------------------------------------------
+
+def layer_ops(cfg: ModelConfig, mode: str, tokens: int, ctx: int, tp: int,
+              hw: HW, n_layers: int = 4, smart: bool = True
+              ) -> List[Op]:
+    """Build the op list for `n_layers` consecutive layers."""
+    d = cfg.d_model
+    n = tp
+    ops: List[Op] = []
+
+    def comm_block(tag: str, t: int, deps) -> Tuple[str, List[Op]]:
+        """the AR(+norm) slot; returns (terminal op name, ops)."""
+        if mode == "nocomm":
+            o = Op(f"norm{tag}", "compute", t_norm(t, d, hw, fused=False),
+                   tuple(deps))
+            return o.name, [o]
+        if mode == "vanilla":
+            a = Op(f"ar{tag}", "comm", t_allreduce(t, d, n, hw), tuple(deps))
+            b = Op(f"norm{tag}", "compute", t_norm(t, d, hw, fused=False),
+                   (a.name,))
+            return b.name, [a, b]
+        if mode == "reordered":
+            a = Op(f"rs{tag}", "comm", t_rs_or_ag(t, d, n, hw), tuple(deps))
+            b = Op(f"norm{tag}", "compute",
+                   t_norm(max(t // n, 1), d, hw, fused=False), (a.name,))
+            c = Op(f"ag{tag}", "comm", t_rs_or_ag(t, d, n, hw), (b.name,))
+            return c.name, [a, b, c]
+        # fused kernel: RS + single-pass norm on t/N + AG as ONE comm op
+        dur = (2 * t_rs_or_ag(t, d, n, hw)
+               + t_norm(max(t // n, 1), d, hw, fused=True))
+        o = Op(f"fused{tag}", "comm", dur, tuple(deps))
+        return o.name, [o]
+
+    if mode in ("vanilla", "reordered", "fuseonly", "nocomm"):
+        prev = ()
+        for i in range(n_layers):
+            at = Op(f"attn{i}", "compute",
+                    t_attn_layer(cfg, tokens, ctx, tp, hw), prev)
+            ops.append(at)
+            t1, blk = comm_block(f"_a{i}", tokens, [at.name])
+            ops += blk
+            ff = Op(f"ffn{i}", "compute", t_ffn_layer(cfg, tokens, tp, hw),
+                    (t1,))
+            ops.append(ff)
+            t2, blk2 = comm_block(f"_f{i}", tokens, [ff.name])
+            ops += blk2
+            prev = (t2,)
+        return ops
+
+    assert mode == "tokenweave"
+    split = smart_split(tokens, hw.tile) if smart else naive_split(tokens)
+    if split is None:
+        return layer_ops(cfg, "fuseonly", tokens, ctx, tp, hw, n_layers)
+    t0, t1v = split
+    cache_ctx = max(ctx - tokens, 0)   # pre-existing (chunked-prefill) kv
+    prev = {0: (), 1: ()}
+    for i in range(n_layers):
+        # paper Fig 8 order; suffix attends prefix's kv -> dep on attn0
+        a0 = Op(f"attn0_{i}", "compute",
+                t_attn_layer(cfg, t0, cache_ctx + t0, tp, hw),
+                prev[0])
+        c0, blk0 = comm_block(f"_a0{i}", t0, [a0.name])
+        a1 = Op(f"attn1_{i}", "compute",
+                t_attn_layer(cfg, t1v, cache_ctx + tokens, tp, hw),
+                prev[1] + (a0.name,))
+        c1, blk1 = comm_block(f"_a1{i}", t1v, [a1.name])
+        f0 = Op(f"ffn0_{i}", "compute", t_ffn_layer(cfg, t0, tp, hw), (c0,))
+        d0, blkd0 = comm_block(f"_f0{i}", t0, [f0.name])
+        f1 = Op(f"ffn1_{i}", "compute", t_ffn_layer(cfg, t1v, tp, hw), (c1,))
+        d1, blkd1 = comm_block(f"_f1{i}", t1v, [f1.name])
+        ops += [a0, a1, f0, f1] + blk0 + blk1 + blkd0 + blkd1
+        prev = {0: (d0,), 1: (d1,)}
+    return ops
+
+
+def layer_latency(cfg: ModelConfig, mode: str, tokens: int, *, tp: int = 8,
+                  ctx: Optional[int] = None, hw: Optional[HW] = None,
+                  n_layers: int = 4, smart: bool = True) -> float:
+    """Steady-state per-layer latency (simulate n_layers, divide)."""
+    hw = hw or HW()
+    ctx = ctx if ctx is not None else tokens
+    total, _ = simulate(layer_ops(cfg, mode, tokens, ctx, tp, hw,
+                                  n_layers=n_layers, smart=smart))
+    return total / n_layers
+
+
+def e2e_latency(cfg: ModelConfig, mode: str, tokens: int, **kw) -> float:
+    per_layer = layer_latency(cfg, mode, tokens, **kw)
+    return per_layer * cfg.num_layers

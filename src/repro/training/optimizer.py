@@ -1,0 +1,110 @@
+"""Sharded AdamW with ZeRO-1-style optimizer-state partitioning.
+
+The optimizer update is elementwise, so it runs as plain jit under GSPMD:
+``zero_specs`` extends each parameter's PartitionSpec with the data-parallel
+axes on the largest unsharded, divisible dimension. Gradients arrive
+dp-replicated (the shard_map transpose already reduced them), XLA
+dynamic-slices them against the dp-sharded m/v states, and the updated
+params are all-gathered back to replicated — i.e. ZeRO-1 dataflow for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def zero_specs(params, pspecs, dp_axes, dp_size: int):
+    """Extend each param spec with the (unused) dp axes on a divisible free
+    dim. Params already sharded over a dp axis (ep2d MoE experts) only get
+    the remaining axes."""
+    n_dp = max(len(dp_axes), 1)
+    per_axis = max(int(round(dp_size ** (1.0 / n_dp))), 1)
+
+    def extend(p, spec):
+        entries = list(spec) + [None] * (p.ndim - len(spec))
+        used = set()
+        for e in entries:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                if a is not None:
+                    used.add(a)
+        avail = [a for a in dp_axes if a not in used]
+        if not avail:
+            return P(*entries)
+        div = per_axis ** len(avail) if len(avail) < n_dp else dp_size
+        best, best_size = -1, 0
+        for i, (dim, s) in enumerate(zip(p.shape, entries)):
+            if s is None and dim % div == 0 and dim > best_size:
+                best, best_size = i, dim
+        if best < 0:
+            return P(*entries)
+        entries[best] = tuple(avail) if len(avail) > 1 else avail[0]
+        return P(*entries)
+
+    return jax.tree.map(extend, params, pspecs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def opt_state_specs(params, pspecs, dp_axes, dp_size: int):
+    zs = zero_specs(params, pspecs, dp_axes, dp_size)
+    return {"m": zs, "v": zs, "step": P()}
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig, gnorm=None):
+    step = opt_state["step"] + 1
+    if gnorm is None:
+        gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = _schedule(cfg, step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m2 / (1 - cfg.b1 ** step)
+        vhat = v2 / (1 - cfg.b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        p2 = p.astype(jnp.float32) * (1 - lr * decay) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,49 @@
+"""Shared fixtures. Tests in this process see ONE CPU device; multi-device
+semantics are exercised via subprocess helpers (run_distributed) so the
+512-device dry-run flag never leaks into the main test process."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_distributed(code: str, n_devices: int = 8, timeout: int = 420):
+    """Run a python snippet in a subprocess with n fake CPU devices.
+    The snippet should raise/assert on failure and print 'PASS' on success.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, (
+        f"distributed snippet failed\nSTDOUT:\n{proc.stdout[-3000:]}\n"
+        f"STDERR:\n{proc.stderr[-3000:]}")
+    assert "PASS" in proc.stdout, proc.stdout[-2000:]
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    import jax
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    from repro.configs.base import ModelConfig
+    return ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                       num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=128, dtype="float32")
+
+
+@pytest.fixture(scope="session")
+def tiny_pcfg():
+    from repro.configs.base import ParallelConfig
+    return ParallelConfig(tokenweave=True, comm_mode="fused", remat=False,
+                          split_unit=16, tokenweave_min_tokens=32)

@@ -1,0 +1,192 @@
+"""Multi-device semantics (8 fake CPU devices via subprocess): the paper's
+central equivalences — fused/reordered/vanilla comm_norm identity, dense
+model loss identity across comm modes and the weave, MoE partitionings vs
+the dense oracle."""
+from conftest import run_distributed
+
+
+def test_comm_norm_modes_equal():
+    run_distributed("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.distributed.context import CommCtx
+from repro.core import fused_collectives as fc
+mesh = jax.make_mesh((1, 8), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+T, d, tp = 64, 32, 8
+xs = jax.random.normal(jax.random.PRNGKey(0), (tp, T, d), jnp.float32)
+res = jax.random.normal(jax.random.PRNGKey(3), (T, d), jnp.float32)
+w = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (d,))) + 0.5
+def run(mode):
+    ctx = CommCtx(mode=mode)
+    sharded = mode in ('fused', 'reordered')
+    def f(xsh, r):
+        return fc.comm_norm(xsh[0], r if sharded else r[0], w, ctx=ctx)
+    res_in = res if sharded else jnp.broadcast_to(res[None], (tp, T, d))
+    g = jax.jit(jax.shard_map(
+        f, mesh=mesh, in_specs=(P('model'), P('model')),
+        out_specs=(P(None), P('model') if sharded else P(None)),
+        check_vma=False))
+    return g(xs, res_in)
+o_v, r_v = run('vanilla')
+o_f, r_f = run('fused')
+o_r, r_r = run('reordered')
+np.testing.assert_allclose(o_v, o_f, rtol=2e-5, atol=2e-5)
+np.testing.assert_allclose(o_v, o_r, rtol=2e-5, atol=2e-5)
+np.testing.assert_allclose(r_v, r_f.reshape(T, d), rtol=2e-5, atol=2e-5)
+print('PASS')
+""")
+
+
+def test_dense_model_modes_and_weave_equal_tp4():
+    run_distributed("""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import transformer as T
+cfg = ModelConfig(name='tiny', family='dense', num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=256, dtype='float32')
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+tok = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0, 256)
+lab = jax.random.randint(jax.random.PRNGKey(2), (4, 64), 0, 256)
+base = ParallelConfig(tokenweave=False, comm_mode='vanilla', remat=False,
+                      split_unit=32, tokenweave_min_tokens=64)
+params = T.init_params(jax.random.PRNGKey(0), cfg, base, 4)
+losses = {}
+for name, over in {
+    'vanilla': {}, 'fused': dict(comm_mode='fused'),
+    'reordered': dict(comm_mode='reordered'),
+    'weave': dict(comm_mode='fused', tokenweave=True),
+    'weave_reordered': dict(comm_mode='reordered', tokenweave=True),
+}.items():
+    pcfg = dataclasses.replace(base, **over)
+    def loss_fn(params, tokens, labels):
+        ls, dn, _ = T.train_loss(params, {'tokens': tokens,
+                                          'labels': labels},
+                                 cfg=cfg, pcfg=pcfg)
+        return jax.lax.psum(ls, 'data') / jax.lax.psum(dn, 'data')
+    f = jax.jit(jax.shard_map(
+        loss_fn, mesh=mesh,
+        in_specs=(T.param_specs(cfg, pcfg), P('data'), P('data')),
+        out_specs=P(), check_vma=False))
+    losses[name] = float(f(params, tok, lab))
+ref = losses['vanilla']
+for k, v in losses.items():
+    np.testing.assert_allclose(v, ref, rtol=1e-5), (k, v, ref)
+print('PASS', losses)
+""")
+
+
+def test_moe_partitionings_match_dense_oracle():
+    run_distributed("""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import ModelConfig
+from repro.layers import moe as M
+cfg = ModelConfig(name='t', family='moe', num_layers=1, d_model=32,
+                  num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=64,
+                  num_experts=8, num_experts_per_tok=2, moe_d_ff=16,
+                  capacity_factor=8.0, dtype='float32')
+p1 = M.init_moe_params(jax.random.PRNGKey(0), cfg, 1)
+x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+def dense(params, x):
+    wg, wu, wd = params['w_gate'][0], params['w_up'][0], params['w_down'][0]
+    t = x.reshape(-1, 32)
+    probs = jax.nn.softmax(t @ params['router'][0], -1)
+    topw, topi = jax.lax.top_k(probs, 2)
+    topw = topw / topw.sum(-1, keepdims=True)
+    out = jnp.zeros_like(t)
+    for e in range(8):
+        h = jax.nn.silu(t @ wg[e]) * (t @ wu[e])
+        out += jnp.where(topi == e, topw, 0.).sum(-1)[:, None] * (h @ wd[e])
+    return out.reshape(x.shape)
+o_ref = dense(p1, x)
+mesh4 = jax.make_mesh((1, 4), ('data', 'model'),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+# expert mode tp=4
+wg4 = p1['w_gate'][0].reshape(4, 2, 32, 16)
+wu4 = p1['w_up'][0].reshape(4, 2, 32, 16)
+wd4 = p1['w_down'][0].reshape(4, 2, 16, 32)
+def f4(wg, wu, wd):
+    out, _ = M.moe_forward({'router': p1['router'], 'w_gate': wg,
+                            'w_up': wu, 'w_down': wd}, x, cfg)
+    return jax.lax.psum(out, 'model')
+g4 = jax.jit(jax.shard_map(f4, mesh=mesh4, in_specs=(P('model'),) * 3,
+                           out_specs=P(None), check_vma=False))
+np.testing.assert_allclose(g4(wg4, wu4, wd4), o_ref, rtol=1e-4, atol=1e-5)
+# ffn mode tp=4
+cfg_f = dataclasses.replace(cfg, moe_partition='ffn')
+wgf = jnp.stack(jnp.split(p1['w_gate'][0], 4, axis=-1))
+wuf = jnp.stack(jnp.split(p1['w_up'][0], 4, axis=-1))
+wdf = jnp.stack(jnp.split(p1['w_down'][0], 4, axis=1))
+def ff(wg, wu, wd):
+    out, _ = M.moe_forward({'router': p1['router'], 'w_gate': wg,
+                            'w_up': wu, 'w_down': wd}, x, cfg_f)
+    return jax.lax.psum(out, 'model')
+gf = jax.jit(jax.shard_map(ff, mesh=mesh4, in_specs=(P('model'),) * 3,
+                           out_specs=P(None), check_vma=False))
+np.testing.assert_allclose(gf(wgf, wuf, wdf), o_ref, rtol=1e-4, atol=1e-5)
+# ep2d on 2x2
+mesh22 = jax.make_mesh((2, 2), ('data', 'model'),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg_e = dataclasses.replace(cfg, moe_partition='ep2d')
+wge = jnp.stack(jnp.split(p1['w_gate'][0].reshape(2, 4, 32, 16), 2, -1), 1)
+wue = jnp.stack(jnp.split(p1['w_up'][0].reshape(2, 4, 32, 16), 2, -1), 1)
+wde = jnp.stack(jnp.split(p1['w_down'][0].reshape(2, 4, 16, 32), 2, 2), 1)
+def fe(wg, wu, wd):
+    out, _ = M.moe_forward({'router': p1['router'], 'w_gate': wg,
+                            'w_up': wu, 'w_down': wd}, x, cfg_e)
+    return jax.lax.psum(out, 'model')
+ge = jax.jit(jax.shard_map(fe, mesh=mesh22,
+                           in_specs=(P('data', 'model'),) * 3,
+                           out_specs=P(None), check_vma=False))
+np.testing.assert_allclose(ge(wge, wue, wde), o_ref, rtol=1e-4, atol=1e-5)
+print('PASS')
+""")
+
+
+def test_context_parallel_decode():
+    """Flash-decoding combine across a context-parallel KV cache equals the
+    single-shard computation."""
+    run_distributed("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import ModelConfig
+from repro.layers import attention as A
+cfg = ModelConfig(name='t', family='dense', num_layers=1, d_model=32,
+                  num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                  vocab_size=64, dtype='float32')
+mesh = jax.make_mesh((4, 1), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+lay = A.attention_layout(1, 4, 2, 8)
+params = A.init_attention_params(jax.random.PRNGKey(0), cfg, 1)
+B, C = 2, 64   # global cache length; 16 slots per shard
+k = jax.random.normal(jax.random.PRNGKey(1), (B, C, 2, 8))
+v = jax.random.normal(jax.random.PRNGKey(2), (B, C, 2, 8))
+pos = jnp.broadcast_to(jnp.arange(C)[None], (B, C)).astype(jnp.int32)
+pos = jnp.where(pos < 50, pos, -1)   # 50 valid positions
+x = jax.random.normal(jax.random.PRNGKey(3), (B, 1, 32))
+positions = jnp.full((B, 1), 50, jnp.int32)
+def single(k, v, pos):
+    out, _ = A.attn_decode(params, x, {'k': k, 'v': v, 'pos': pos},
+                           positions=positions, cfg=cfg, lay=lay, theta=1e4)
+    return out
+ref = jax.jit(jax.shard_map(
+    lambda: single(k, v, pos), mesh=mesh, in_specs=(), out_specs=P(None),
+    check_vma=False))()
+def cp(k, v, pos):
+    out, _ = A.attn_decode(params, x, {'k': k, 'v': v, 'pos': pos},
+                           positions=positions, cfg=cfg, lay=lay, theta=1e4,
+                           seq_axis=('data',))
+    return out
+got = jax.jit(jax.shard_map(
+    cp, mesh=mesh, in_specs=(P(None, 'data'), P(None, 'data'),
+                             P(None, 'data')),
+    out_specs=P(None), check_vma=False))(k, v, pos)
+np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+print('PASS')
+""", n_devices=4)
