@@ -169,6 +169,47 @@ def fig12_engine_cpu(quick=False):
          f"tokens_per_s={results[True][0]:.0f} outputs_identical=True")
 
 
+def serve_prefix_cache(quick=False):
+    """Paged-KV serving: multi-turn shared-system-prompt workload through
+    the paged engine vs. the same trace cold (prefix cache off).  CPU-real;
+    reports prefix-hit rate, preemptions, and prefill tokens saved —
+    outputs are pinned token-identical between the two runs."""
+    import sys as _sys
+    import os as _os
+    _sys.path.insert(0, _os.path.join(_os.path.dirname(__file__), ".."))
+    from examples.shared_prefix_serve import conversation_trace, run_trace
+    from repro.configs.base import ModelConfig, ParallelConfig
+    from repro.models.build import build_model
+
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=128, dtype="float32")
+    pcfg = ParallelConfig(tokenweave=True, comm_mode="fused", remat=False,
+                          split_unit=16, tokenweave_min_tokens=32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    api = build_model(cfg, pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    users, turns = (2, 2) if quick else (4, 3)
+
+    runs = {}
+    for cached in (False, True):
+        trace = conversation_trace(users, turns, vocab=cfg.vocab_size)
+        eng, done, dt = run_trace(api, mesh, params, trace,
+                                  prefix_caching=cached, paged=True,
+                                  chunk=64, max_batch=2)
+        runs[cached] = (eng, {r.rid: r.output for r in done}, dt)
+    assert runs[True][1] == runs[False][1], "prefix cache changed outputs!"
+    eng, _, dt = runs[True]
+    cold_prefill = runs[False][0].stats.prefill_tokens
+    st = eng.block_mgr.stats
+    _row("serve/prefix_cache", dt * 1e6 / max(eng.stats.steps, 1),
+         f"hit_rate={st.hit_rate:.2f} "
+         f"prefill_saved={cold_prefill - eng.stats.prefill_tokens} "
+         f"preemptions={st.preemptions} evictions={st.evictions} "
+         f"outputs_identical=True")
+
+
 def fig14_overlap_comparison(quick=False):
     """Paper Fig.14 analogue: TokenWeave vs a TileLink-style GEMM-fused
     overlap (which can only hide comm inside GEMMs and pays split RS/AG)."""
@@ -236,24 +277,38 @@ def kernels_micro(quick=False):
 
 FIGS = [fig1_comm_overhead, fig4_fused_kernel, fig9_smart_split,
         fig11_latency, fig12_throughput, fig12_engine_cpu,
-        fig14_overlap_comparison, fig16_ablation, kernels_micro]
+        serve_prefix_cache, fig14_overlap_comparison, fig16_ablation,
+        kernels_micro]
 
 
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true")
     p.add_argument("--only", default=None)
+    p.add_argument("--strict", action="store_true",
+                   help="exit non-zero if any figure errors (CI gate; the "
+                        "default keeps the full local sweep robust)")
     args = p.parse_args()
     print("name,us_per_call,derived")
+    errors = 0
+    ran = 0
     for fig in FIGS:
         if args.only and args.only not in fig.__name__:
             continue
+        ran += 1
         try:
             fig(quick=args.quick)
         except Exception as e:  # keep the harness robust
+            errors += 1
             _row(f"{fig.__name__}/ERROR", 0.0, f"{type(e).__name__}: {e}")
             import traceback
             traceback.print_exc(file=sys.stderr)
+    if args.only and not ran:
+        print(f"no figures match --only {args.only!r}", file=sys.stderr)
+        if args.strict:
+            sys.exit(1)   # a typo'd filter must not pass the CI gate
+    if args.strict and errors:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

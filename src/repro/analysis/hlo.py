@@ -220,8 +220,12 @@ def _parse_computation(name: str, lines: List[str]) -> Computation:
         # FLOPs: dot ops
         if op == "dot":
             cm = _CONTRACT_RE.search(line)
-            operands = re.findall(r"\(%([\w\.\-]+)", rhs[paren:])
-            operands += re.findall(r",\s*%([\w\.\-]+)", rhs[paren:])
+            # operand list ends at the first ')' (dot operands are arrays,
+            # never tuple-typed); older XLA prints operand types inline
+            # ("dot(f32[8,64]{1,0} %a, ...)"), newer prints bare "%a"
+            close = rhs.find(")", paren)
+            operands = re.findall(r"%([\w\.\-]+)",
+                                  rhs[paren:close if close > 0 else None])
             result_elems = 1
             for _, dims in _shape_dims(result_type):
                 for d in dims:

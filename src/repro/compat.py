@@ -1,0 +1,120 @@
+"""Compatibility shims for the range of jax releases this repo runs on.
+
+The codebase is written against the current jax API surface:
+
+* ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+* ``jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto, ...))``
+
+Older releases (the container ships jax 0.4.37) expose ``shard_map`` only
+under ``jax.experimental.shard_map`` (with ``check_rep`` instead of
+``check_vma``), ``jax.make_mesh`` without the ``axis_types`` parameter, and
+no ``jax.sharding.AxisType`` at all.  ``install()`` patches the ``jax``
+namespace so the same call sites work on both; it is a no-op on new jax.
+
+``install()`` runs automatically on ``import repro`` (and, because
+``src/sitecustomize.py`` imports this module, in every interpreter launched
+with ``PYTHONPATH=src`` — including the subprocess snippets the distributed
+tests spawn, which call ``jax.make_mesh`` before importing repro).
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+_installed = False
+
+# True on jax with varying-manual-axes tracking (jax.typeof(...).vma).
+# Pre-VMA releases transpose manual-collective bodies with different seed
+# conventions (see training/train_step.py); set by install().
+HAS_VMA = True
+
+
+def install() -> None:
+    global _installed, HAS_VMA
+    if _installed:
+        return
+    _installed = True
+    import jax
+
+    HAS_VMA = hasattr(jax, "typeof")
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            # old jax has no explicit/auto mesh-axis distinction; the repo
+            # only ever asks for Auto, so dropping the argument is exact
+            return _make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax.lax, "axis_size"):
+        from jax import core as _core
+
+        def axis_size(axis_name):
+            # 0.4.x: core.axis_frame(name) IS the static int size
+            if isinstance(axis_name, (tuple, list)):
+                n = 1
+                for nm in axis_name:
+                    n *= _core.axis_frame(nm)
+                return n
+            return _core.axis_frame(axis_name)
+
+        jax.lax.axis_size = axis_size
+
+    if not hasattr(jax, "typeof"):
+        from jax import core as _core2
+
+        class _AllAxes:
+            """Pre-VMA jax cannot track varying-manual-axes; report every
+            value as varying over every axis.  Callers branching on
+            ``axis in typeof(x).vma`` then emit the conservative psum,
+            which matches the unchecked (check_rep=False) transpose that
+            leaves cotangents as per-shard partials."""
+
+            def __contains__(self, axis):
+                return True
+
+        class _CompatAval:
+            vma = _AllAxes()
+
+            def __init__(self, aval):
+                self._aval = aval
+
+            def __getattr__(self, name):
+                return getattr(self._aval, name)
+
+        def typeof(x):
+            aval = _core2.get_aval(x)
+            return aval if hasattr(aval, "vma") else _CompatAval(aval)
+
+        jax.typeof = typeof
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                      **kw):
+            if "check_rep" not in kw:
+                # check_vma -> check_rep (renamed in jax 0.6); when unset,
+                # default False: the old replication checker predates VMA
+                # and rejects valid manual-collective bodies
+                kw["check_rep"] = bool(check_vma)
+            return _shard_map(f, mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+
+install()

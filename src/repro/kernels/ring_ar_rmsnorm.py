@@ -165,7 +165,13 @@ def ring_fused_ar_rmsnorm(x, residual, weight, *, axis_name: str,
             pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.REGULAR((2,)),
         ],
-        compiler_params=pltpu.CompilerParams(collective_id=7),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        compiler_params=getattr(pltpu, "CompilerParams",
+                                getattr(pltpu, "TPUCompilerParams", None)
+                                )(collective_id=7),
+        # older pallas has no InterpretParams dataclass; plain True selects
+        # the same interpreter
+        interpret=(pltpu.InterpretParams()
+                   if hasattr(pltpu, "InterpretParams") else True)
+        if interpret else False,
     )(x, residual, weight)
     return out, new_res

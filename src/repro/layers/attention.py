@@ -334,22 +334,35 @@ def attn_decode(params, x, cache, *, positions, cfg, lay: AttnLayout, theta,
         v_c = jnp.where(mine[..., None], v_upd, cache["v"])
         p_c = jnp.where(mine[:, :, 0], p_upd, cache["pos"])
 
-    kvh = k_c.shape[2]
+    partial = _decode_attn_math(params, q, k_c, v_c, p_c, positions,
+                                x_dtype=x.dtype, cfg=cfg, lay=lay,
+                                window=window, seq_axis=seq_axis)
+    return partial, {"k": k_c, "v": v_c, "pos": p_c}
+
+
+def _decode_attn_math(params, q, k, v, kpos, positions, *, x_dtype, cfg,
+                      lay: AttnLayout, window, seq_axis=None):
+    """Shared single-token decode epilogue: grouped-QK logits, masked
+    stable softmax (optionally flash-decoding combined over a
+    context-parallel ``seq_axis``), V accumulate, output projection.
+    q: (B, 1*h_loc, dh) grouped internally; k/v: (B, C, kvh, dh)."""
+    b = q.shape[0]
+    kvh = k.shape[2]
     g = q.shape[2] // kvh
     qg = q.reshape(b, 1, kvh, g, cfg.head_dim)
     # bf16 operands + f32 accumulation (MXU-native) — pre-casting the cache
     # to f32 would round-trip the whole KV through HBM at double width
-    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_c,
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
                         preferred_element_type=jnp.float32) \
         * (cfg.head_dim ** -0.5)
-    msk = _mask(positions, p_c, True, window)  # (B, 1, C)
+    msk = _mask(positions, kpos, True, window)  # (B, 1, C)
     logits = jnp.where(msk[:, None, None], logits, NEG_INF)
     m = jnp.max(logits, axis=-1)
     if seq_axis is not None:
         m = lax.pmax(m, seq_axis)
     p = jnp.exp(logits - m[..., None])
     l = jnp.sum(p, axis=-1)
-    acc = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_c.dtype), v_c,
+    acc = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     if seq_axis is not None:
         # flash-decoding combine across context-parallel shards
@@ -357,9 +370,55 @@ def attn_decode(params, x, cache, *, positions, cfg, lay: AttnLayout, theta,
         acc = lax.psum(acc, seq_axis)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     out = jnp.moveaxis(out, 3, 1).reshape(b, 1, lay.h_loc * cfg.head_dim)
-    partial = jnp.einsum("bsf,fd->bsd", out.astype(x.dtype), _sq(params["wo"]))
+    partial = jnp.einsum("bsf,fd->bsd", out.astype(x_dtype),
+                         _sq(params["wo"]))
     if lay.replicas > 1:
         partial = partial * lay.o_scale
+    return partial
+
+
+def attn_decode_paged(params, x, pool_layer, block_tables, *, positions, cfg,
+                      lay: AttnLayout, theta, window: int = 0,
+                      mrope_positions=None):
+    """Single-token decode against one layer of the paged block pool.
+
+    pool_layer: {"k": (nb, bs, kvh, dh), "v": ..., "pos": (nb, bs)} — the
+    pool is SHARED across requests; each row of ``block_tables`` (B, nblk,
+    int32, -1 = unallocated) maps a request's logical blocks to physical
+    ones.  The new token scatters through the table (OOB-drop for inactive
+    rows, pos < 0), then attention runs over the gathered rectangular
+    (B, nblk*bs) view.  Sliding windows are enforced purely by the mask —
+    paged layers have no ring buffer (DESIGN.md §7).  No ``seq_axis``:
+    the shared block axis cannot shard over data, so the paged path is
+    single-host (context-parallel decode stays on the slot path).
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, x, cfg, lay, positions=positions,
+                                   theta=theta,
+                                   mrope_positions=mrope_positions)
+    nb, bs = pool_layer["pos"].shape
+    pos = positions[:, 0]  # (B,)
+
+    blk = jnp.where(pos >= 0, pos // bs, 0)
+    phys = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    phys = jnp.where((pos >= 0) & (phys >= 0), phys, nb)   # OOB -> dropped
+    off = jnp.where(pos >= 0, pos % bs, 0)
+    k_c = pool_layer["k"].at[phys, off].set(k_new[:, 0], mode="drop")
+    v_c = pool_layer["v"].at[phys, off].set(v_new[:, 0], mode="drop")
+    p_c = pool_layer["pos"].at[phys, off].set(pos.astype(jnp.int32),
+                                              mode="drop")
+
+    bt = jnp.maximum(block_tables, 0)
+    nblk = bt.shape[1]
+    kvh = k_c.shape[2]
+    kg = k_c[bt].reshape(b, nblk * bs, kvh, cfg.head_dim)
+    vg = v_c[bt].reshape(b, nblk * bs, kvh, cfg.head_dim)
+    pg = jnp.where(block_tables[:, :, None] >= 0, p_c[bt], -1)
+    pg = pg.reshape(b, nblk * bs)
+
+    partial = _decode_attn_math(params, q, kg, vg, pg, positions,
+                                x_dtype=x.dtype, cfg=cfg, lay=lay,
+                                window=window)
     return partial, {"k": k_c, "v": v_c, "pos": p_c}
 
 

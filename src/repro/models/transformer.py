@@ -157,13 +157,21 @@ def param_specs(cfg: ModelConfig, pcfg: ParallelConfig):
 
 def _layer_split(lp, h, res, *, positions, mrope_positions, kind: LayerKind,
                  cfg, pcfg, ctx: CommCtx, lay, kv_prefix, cache_layer,
-                 decode: bool):
+                 decode: bool, block_tables=None):
     """One transformer layer on one token-split.
 
     Returns (h_next, res, new_kv or new_cache_layer, aux).
     """
     aux = jnp.zeros((), jnp.float32)
-    if decode:
+    if decode and block_tables is not None:
+        # paged decode: cache_layer is one layer of the shared block pool;
+        # the block-table indirection replaces per-slot rows (no seq_axis —
+        # the shared pool cannot shard over data, DESIGN.md §7)
+        a_part, kv_out = A.attn_decode_paged(
+            lp["attn"], h, cache_layer, block_tables, positions=positions,
+            cfg=cfg, lay=lay, theta=kind.theta, window=kind.window,
+            mrope_positions=mrope_positions)
+    elif decode:
         seq_axis = (tuple(pcfg.dp_axes)
                     if pcfg.seq_shard_kv and kind.window == 0 else None)
         a_part, kv_out = A.attn_decode(
@@ -199,7 +207,7 @@ def _layer_split(lp, h, res, *, positions, mrope_positions, kind: LayerKind,
 
 
 def _weave_layer(lp, state, cache_layer, *, kind, cfg, pcfg, ctx, lay,
-                 decode: bool):
+                 decode: bool, block_tables=None):
     """Run one layer over one or two splits in paper-Fig.8 order.
 
     state: dict with lists h[i], res[i], positions[i], mrope[i].
@@ -208,6 +216,17 @@ def _weave_layer(lp, state, cache_layer, *, kind, cfg, pcfg, ctx, lay,
     n = len(state["h"])
     kv_outs, auxes = [], []
     new_h, new_res = list(state["h"]), list(state["res"])
+
+    if decode and block_tables is not None:
+        # paged decode runs unsplit (forward forces split=None): a batch
+        # split would fork the shared block pool into two divergent copies
+        assert n == 1, "paged decode cannot weave-split the shared pool"
+        h, res, new_cache, aux = _layer_split(
+            lp, state["h"][0], state["res"][0],
+            positions=state["positions"][0], mrope_positions=state["mrope"][0],
+            kind=kind, cfg=cfg, pcfg=pcfg, ctx=ctx, lay=lay, kv_prefix=None,
+            cache_layer=cache_layer, decode=True, block_tables=block_tables)
+        return dict(state, h=[h], res=[res]), new_cache, aux
 
     if decode:
         sizes = [h.shape[0] for h in state["h"]]
@@ -306,13 +325,17 @@ def _entry_norm(emb, w_first, ctx):
 
 def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
             positions=None, mrope_positions=None, extra_embeds=None,
-            cache=None, decode: bool = False, return_kv: bool = True):
+            cache=None, decode: bool = False, return_kv: bool = True,
+            block_tables=None):
     """Shared forward. Returns (hidden_normed (B,S,d), kv_or_cache, aux).
 
     train: cache=None, decode=False (kv output suppressed via return_kv).
     prefill chunk: cache = existing KV cache (attended as prefix); the
         chunk's new kv is returned for the engine to insert.
     decode: cache required; S == 1; returns the updated cache.
+    block_tables: (B, max_blocks) int32 — switches decode to the paged
+        block-pool cache layout (runtime/paging.py); prefill is unaffected
+        (the engine pre-gathers the paged prefix into rectangular rows).
     """
     tp = lax.axis_size(pcfg.tp_axis)
     b = tokens.shape[0]
@@ -334,6 +357,8 @@ def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
     w_first = params["norm_first"][0]
 
     split = _decide_split(b, s_total, tp=tp, pcfg=pcfg, decode=decode)
+    if decode and block_tables is not None:
+        split = None  # shared pool cannot be forked across a batch split
     if split is not None and not decode:
         s1, _ = split
         embs = [emb[:, :s1], emb[:, s1:]]
@@ -368,7 +393,7 @@ def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
             lp, cache_layer = xs
             st, kv_new, aux_l = _weave_layer(
                 lp, st, cache_layer, kind=kind, cfg=cfg, pcfg=pcfg, ctx=ctx,
-                lay=lay, decode=decode)
+                lay=lay, decode=decode, block_tables=block_tables)
             ys = kv_new if (return_kv or decode) else None
             return (st, aux + aux_l), ys
 
@@ -390,7 +415,7 @@ def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
             cache_layer = None if cache is None else cache[f"layer_{i}"]
             fn = functools.partial(
                 _weave_layer, kind=kind, cfg=cfg, pcfg=pcfg, ctx=ctx,
-                lay=lay, decode=decode)
+                lay=lay, decode=decode, block_tables=block_tables)
             if pcfg.remat:
                 fn = jax.checkpoint(
                     fn, policy=jax.checkpoint_policies.nothing_saveable)
@@ -459,13 +484,14 @@ def prefill(params, tokens, cache, *, cfg, pcfg, positions,
 
 
 def decode_step(params, tokens, cache, *, cfg, pcfg, positions,
-                mrope_positions=None):
+                mrope_positions=None, block_tables=None):
     """Single-token decode. Returns (logits local shard (B,1,V_loc),
-    updated cache)."""
+    updated cache). ``block_tables`` selects the paged block-pool layout
+    (cache = pool from runtime/paging.init_paged_cache)."""
     h, new_cache, _ = forward(params, tokens, cfg=cfg, pcfg=pcfg,
                               positions=positions,
                               mrope_positions=mrope_positions, cache=cache,
-                              decode=True)
+                              decode=True, block_tables=block_tables)
     logits = E.lm_head_logits(params["embedding"], h)
     return logits, new_cache
 

@@ -10,11 +10,23 @@ masked via position -1) and/or one rectangular prefill chunk for a group of
 admitted requests (Sarathi-style chunked prefill, lengths bucketed to bound
 recompilation). TokenWeave activates inside the model whenever the batch
 crosses ``tokenweave_min_tokens``.
+
+Two KV-cache backends (SchedulerConfig.paged):
+
+* legacy slots — fixed (L, max_batch, max_len) rows per request; slots are
+  invalidated on finish so stale positions never leak into a reused slot.
+* paged (runtime/paging.py) — block pool + per-request block tables with
+  prefix-cache sharing, LRU eviction, copy-on-write, and recompute
+  preemption (DECODE -> WAITING) when the pool runs dry.  Admission and
+  chunk accounting charge only prefix-MISS tokens, so the TokenWeave
+  min-token threshold sees true compute size.  Transformer families only
+  (ssm state is not paged), single host (the shared pool cannot shard over
+  the data axis) — DESIGN.md §7.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +35,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.build import ModelApi
 from repro.runtime import kv_cache as KC
+from repro.runtime import paging as PG
+from repro.runtime.paging import BlockManager
 from repro.runtime.requests import Request, State
 from repro.runtime.sampler import sample
 from repro.runtime.scheduler import Scheduler, SchedulerConfig
@@ -44,20 +58,34 @@ class Engine:
         self.params = params
         self.scfg = scfg
         self.temperature = temperature
-        self.sched = Scheduler(scfg)
         self.stats = EngineStats()
         self._step_count = 0
-        self._lengths = np.zeros(scfg.max_batch, np.int64)
         self._jit_cache: Dict = {}
+        self._pspec = api.specs()
+        self._is_ssm = api.cfg.family == "ssm"
+        self.paged = bool(scfg.paged)
 
-        cache = api.init_cache(scfg.max_batch, scfg.max_len)
-        cspec = api.cache_specs()
+        if self.paged:
+            if self._is_ssm:
+                raise ValueError("paged KV cache requires attention layers; "
+                                 "ssm state caches stay on the slot path")
+            self.block_mgr = BlockManager(
+                scfg.effective_num_blocks, scfg.block_size,
+                scfg.max_blocks_per_req,
+                prefix_caching=scfg.prefix_caching)
+            cache = PG.init_paged_cache(scfg.effective_num_blocks,
+                                        scfg.block_size, api.cfg, api.tp,
+                                        api.pcfg)
+            cspec = PG.paged_cache_specs(api.cfg, api.pcfg)
+        else:
+            self.block_mgr = None
+            cache = api.init_cache(scfg.max_batch, scfg.max_len)
+            cspec = api.cache_specs()
+        self.sched = Scheduler(scfg, block_mgr=self.block_mgr)
         self.cache = jax.device_put(
             cache, jax.tree.map(lambda s: NamedSharding(mesh, s), cspec,
                                 is_leaf=lambda s: isinstance(s, P)))
         self._cspec = cspec
-        self._pspec = api.specs()
-        self._is_ssm = api.cfg.family == "ssm"
 
     # ------------------------------------------------------------------
     # jitted step functions
@@ -108,6 +136,34 @@ class Engine:
         self._jit_cache[key] = jfn
         return jfn
 
+    def _paged_prefill_fn(self, b_sel: int, chunk: int):
+        key = ("pprefill", b_sel, chunk)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        api = self.api
+
+        def fn(params, pool, tokens, positions, block_tables, last_idx):
+            # rectangular context view through the block-table indirection;
+            # the model's prefill path is backend-agnostic (rows look
+            # exactly like gathered slot rows)
+            rows = PG.gather_block_rows(pool, block_tables)
+            logits, kv, _ = api.mod.prefill(
+                params, tokens, rows, cfg=api.cfg, pcfg=api.pcfg,
+                positions=positions, last_idx=last_idx)
+            new_pool = PG.insert_chunk_paged(pool, kv, block_tables)
+            tok = sample(logits, vocab_size=api.cfg.vocab_size,
+                         tp_axis=api.pcfg.tp_axis,
+                         temperature=self.temperature)
+            return tok, new_pool
+
+        sm = jax.shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self._pspec, self._cspec, P(), P(), P(), P()),
+            out_specs=(P(), self._cspec), check_vma=False)
+        jfn = jax.jit(sm, donate_argnums=(1,))
+        self._jit_cache[key] = jfn
+        return jfn
+
     def _decode_fn(self):
         key = ("decode",)
         if key in self._jit_cache:
@@ -131,10 +187,47 @@ class Engine:
         self._jit_cache[key] = jfn
         return jfn
 
+    def _paged_decode_fn(self):
+        key = ("pdecode",)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        api = self.api
+
+        def fn(params, pool, tokens, positions, block_tables):
+            logits, new_pool = api.mod.decode_step(
+                params, tokens, pool, cfg=api.cfg, pcfg=api.pcfg,
+                positions=positions, block_tables=block_tables)
+            tok = sample(logits, vocab_size=api.cfg.vocab_size,
+                         tp_axis=api.pcfg.tp_axis,
+                         temperature=self.temperature)
+            return tok, new_pool
+
+        sm = jax.shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self._pspec, self._cspec, P(), P(), P()),
+            out_specs=(P(), self._cspec), check_vma=False)
+        jfn = jax.jit(sm, donate_argnums=(1,))
+        self._jit_cache[key] = jfn
+        return jfn
+
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
     def add_request(self, req: Request):
+        if len(req.prompt) + 1 > self.scfg.max_len:
+            # the prompt plus at least one decode slot must fit the cache;
+            # legacy slots would silently ring-wrap, paged tables would
+            # overflow — reject loudly instead
+            raise ValueError(
+                f"prompt length {len(req.prompt)} + 1 exceeds max_len "
+                f"{self.scfg.max_len} (rid={req.rid})")
+        if self.paged:
+            need = self.block_mgr.blocks_needed(len(req.prompt)) + 1
+            if need > self.scfg.effective_num_blocks:
+                # even an otherwise-empty pool could never admit it
+                raise ValueError(
+                    f"prompt needs {need} blocks but the pool has only "
+                    f"{self.scfg.effective_num_blocks} (rid={req.rid})")
         req.arrival_step = self._step_count
         self.sched.add(req)
 
@@ -149,71 +242,172 @@ class Engine:
         if plan.prefill is not None:
             self._run_prefill(*plan.prefill)
         if plan.decode_slots:
-            self._run_decode(plan.decode_slots)
+            self._run_decode()
         return True
 
     def run(self, max_steps: int = 100000) -> List[Request]:
         while not self.sched.all_done() and max_steps > 0:
             max_steps -= 1
             if not self.step():
+                if self.sched.waiting:
+                    # nothing active and the queue head cannot be admitted:
+                    # permanently stuck (e.g. a preempted request whose
+                    # regrown context outgrew the pool) — surface it rather
+                    # than silently dropping the request
+                    rids = [r.rid for r in self.sched.waiting]
+                    raise RuntimeError(
+                        f"engine idle with unservable waiting request(s) "
+                        f"{rids}: block pool too small for their context")
                 break
         return self.sched.finished
+
+    # ------------------------------------------------------------------
+    # paged-cache plumbing
+    # ------------------------------------------------------------------
+    def _apply_fixups(self):
+        """Drain queued device-side pool maintenance: pos resets of
+        recycled blocks FIRST (a reset target may since have been handed
+        out again — its new owner writes later, and a COW destination is
+        overwritten entirely by its copy), then copy-on-write copies."""
+        resets = self.block_mgr.take_pending_resets()
+        copies = self.block_mgr.take_pending_copies()
+        if resets:
+            self.cache = PG.reset_blocks(self.cache, resets)
+        if copies:
+            self.cache = PG.copy_blocks(self.cache, copies)
+
+    def _preempt(self, victim: Request):
+        self.block_mgr.free_request(victim.rid)
+        self.block_mgr.stats.preemptions += 1
+        self.sched.preempt(victim)
+
+    def _ensure_decode_blocks(self) -> List[Request]:
+        """Grow/COW the write-target block of every DECODE request; on
+        pool exhaustion preempt the youngest DECODE request (recompute
+        mode) and retry.  Returns the surviving decode batch."""
+        def decoding():
+            return [r for r in self.sched.active
+                    if r is not None and r.state == State.DECODE]
+        for r in decoding():
+            if r.length - 1 >= self.scfg.max_len:
+                # context hit the cache ceiling: stop generating early
+                # (truncated output) rather than overflow the block table
+                self._finish(r)
+        for r in sorted(decoding(), key=lambda r: (r.arrival_step, r.rid)):
+            while r.state == State.DECODE:
+                if self.block_mgr.ensure_writable(r.rid, r.length - 1):
+                    break
+                victims = decoding()
+                victim = max(victims, key=lambda v: (v.arrival_step, v.rid))
+                self._preempt(victim)   # may be r itself -> loop exits
+        return decoding()
 
     # ------------------------------------------------------------------
     def _run_prefill(self, group: List[Request], chunk: int):
         b_sel = len(group)
         if self._is_ssm:
             # ssm chunks must be exact (no pads): shrink to min remainder
-            chunk = min(min(len(r.prompt) - r.prefill_pos for r in group),
-                        chunk)
+            chunk = min(min(len(r.context_tokens) - r.prefill_pos
+                            for r in group), chunk)
         tokens = np.zeros((b_sel, chunk), np.int32)
         positions = np.full((b_sel, chunk), -1, np.int32)
         offsets = np.zeros(b_sel, np.int32)
         last_idx = np.zeros(b_sel, np.int32)
         for i, r in enumerate(group):
-            take = min(chunk, len(r.prompt) - r.prefill_pos)
-            tokens[i, :take] = r.prompt[r.prefill_pos:r.prefill_pos + take]
+            ctx = r.context_tokens
+            take = min(chunk, len(ctx) - r.prefill_pos)
+            tokens[i, :take] = ctx[r.prefill_pos:r.prefill_pos + take]
             positions[i, :take] = np.arange(r.prefill_pos,
                                             r.prefill_pos + take)
             offsets[i] = r.prefill_pos
             last_idx[i] = take - 1
             r.prefill_pos += take
-        slot_ids = np.array([r.slot for r in group], np.int32)
 
-        fn = self._prefill_fn(b_sel, chunk)
-        tok, self.cache = fn(self.params, self.cache, jnp.asarray(tokens),
-                             jnp.asarray(positions), jnp.asarray(slot_ids),
-                             jnp.asarray(offsets), jnp.asarray(last_idx))
+        if self.paged:
+            self._apply_fixups()
+            bt = np.stack([self.block_mgr.table_array(r.rid) for r in group])
+            fn = self._paged_prefill_fn(b_sel, chunk)
+            tok, self.cache = fn(self.params, self.cache,
+                                 jnp.asarray(tokens), jnp.asarray(positions),
+                                 jnp.asarray(bt), jnp.asarray(last_idx))
+        else:
+            slot_ids = np.array([r.slot for r in group], np.int32)
+            fn = self._prefill_fn(b_sel, chunk)
+            tok, self.cache = fn(self.params, self.cache,
+                                 jnp.asarray(tokens), jnp.asarray(positions),
+                                 jnp.asarray(slot_ids), jnp.asarray(offsets),
+                                 jnp.asarray(last_idx))
         tok = np.asarray(tok)
         self.stats.prefill_tokens += int((positions >= 0).sum())
         for i, r in enumerate(group):
-            self._lengths[r.slot] = r.prefill_pos
+            if self.paged:
+                self.block_mgr.register_filled(r.rid, r.context_tokens,
+                                               r.prefill_pos)
             if r.prefill_done:
-                r.output.append(int(tok[i]))
-                r.first_token_step = self._step_count
+                if r.resumed:
+                    # recompute-readmission: output[-1] is still the
+                    # pending decode input; the chunk's sample duplicates
+                    # a token we already emitted — drop it
+                    r.resumed = False
+                else:
+                    r.output.append(int(tok[i]))
+                    r.first_token_step = self._step_count
                 r.state = State.DECODE
-                self._lengths[r.slot] += 0  # first output not yet in cache
                 self._maybe_finish(r)
 
-    def _run_decode(self, slots: List[int]):
+    def _run_decode(self):
+        if self.paged:
+            reqs = self._ensure_decode_blocks()
+            if not reqs:
+                return
+            self._apply_fixups()
+        else:
+            reqs = [r for r in self.sched.active
+                    if r is not None and r.state == State.DECODE]
         bmax = self.scfg.max_batch
         tokens = np.zeros((bmax, 1), np.int32)
         positions = np.full((bmax, 1), -1, np.int32)
-        for r in self.sched.active:
-            if r is not None and r.state == State.DECODE:
-                tokens[r.slot, 0] = r.output[-1]
-                positions[r.slot, 0] = r.length - 1
-        fn = self._decode_fn()
-        tok, self.cache = fn(self.params, self.cache, jnp.asarray(tokens),
-                             jnp.asarray(positions))
+        for r in reqs:
+            tokens[r.slot, 0] = r.output[-1]
+            positions[r.slot, 0] = r.length - 1
+
+        if self.paged:
+            bt = np.full((bmax, self.scfg.max_blocks_per_req), -1, np.int32)
+            for r in reqs:
+                bt[r.slot] = self.block_mgr.table_array(r.rid)
+            fn = self._paged_decode_fn()
+            tok, self.cache = fn(self.params, self.cache,
+                                 jnp.asarray(tokens), jnp.asarray(positions),
+                                 jnp.asarray(bt))
+        else:
+            fn = self._decode_fn()
+            tok, self.cache = fn(self.params, self.cache,
+                                 jnp.asarray(tokens), jnp.asarray(positions))
         tok = np.asarray(tok)
-        self.stats.decode_tokens += len(slots)
-        for r in list(self.sched.active):
-            if r is not None and r.state == State.DECODE:
-                r.output.append(int(tok[r.slot]))
-                self._maybe_finish(r)
+        self.stats.decode_tokens += len(reqs)
+        for r in list(reqs):
+            n_written = r.length  # positions [0, length-1] now in cache
+            r.output.append(int(tok[r.slot]))
+            if self.paged and n_written % self.scfg.block_size == 0:
+                # a block just filled: make it hittable for future prompts
+                self.block_mgr.register_filled(
+                    r.rid, r.prompt + r.output[:-1], n_written)
+            self._maybe_finish(r)
 
     def _maybe_finish(self, r: Request):
         if len(r.output) >= r.max_new_tokens:
-            self.sched.finish(r, self._step_count)
-            self.stats.completed += 1
+            self._finish(r)
+
+    def _finish(self, r: Request):
+        if self.paged:
+            # final registration, then drop refs: cached blocks park in
+            # the LRU (still prefix-hittable), private ones recycle
+            self.block_mgr.register_filled(
+                r.rid, r.prompt + r.output[:-1], r.length - 1)
+            self.block_mgr.free_request(r.rid)
+        elif not self._is_ssm:
+            # release slot state: stale ring-buffer positions from a
+            # finished request must not leak into the slot's next owner
+            self.cache = KC.reset_slots(self.cache, np.asarray([r.slot]))
+        self.sched.finish(r, self._step_count)
+        self.stats.completed += 1

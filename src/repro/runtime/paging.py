@@ -1,0 +1,428 @@
+"""Paged KV-cache subsystem: block pool, per-request block tables, and the
+host-side block manager (allocation, refcounted prefix sharing, LRU
+eviction, copy-on-write, preemption support).
+
+JAX requires static shapes, so vLLM's paged attention is emulated the same
+way the slot cache emulates contiguous caches: the pool is one preallocated
+``(L, num_blocks, block_size, kvh, dh)`` array per k/v (plus an int32
+``pos`` mirror whose -1 entries mark unwritten cells), and every request
+carries a fixed-length block table (``max_blocks`` int32 entries, -1 =
+unallocated).  Reads gather ``pool[table]`` into a rectangular
+``(B, max_blocks*block_size, ...)`` view; writes scatter through
+``table[pos // block_size]`` indirection with OOB-drop for masked tokens.
+
+Host side, ``BlockManager`` composes:
+
+* ``BlockAllocator`` — free list + refcounts + an LRU list of "cached free"
+  blocks (refcount 0 but still registered in the prefix cache; they are
+  evicted — hash dropped, contents recycled — only when the plain free list
+  runs dry).
+* ``PrefixCache`` (prefix_cache.py) — chain-hash -> block map; hits at
+  admission shrink a request's prefill to its miss suffix, which is what
+  the scheduler charges against ``chunk_tokens``.
+* copy-on-write — any write path asks ``ensure_writable`` first; a shared
+  (refcount > 1) target block is replaced by a private copy and the device
+  copy is queued for the engine to apply.
+
+Preemption policy lives in the engine (latest-arrival victim, recompute
+readmission); the manager only provides alloc/free/reset primitives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.prefix_cache import PrefixCache, chain_hashes
+
+
+# ==========================================================================
+# device side: pool construction + gather/scatter indirection
+# ==========================================================================
+
+def _stacked(pool) -> bool:
+    """Stacked (L, nb, bs, ...) pool vs per-layer dict {layer_i: {...}}."""
+    return "k" in pool
+
+
+def init_paged_cache(num_blocks: int, block_size: int, cfg, tp: int,
+                     pcfg=None):
+    """Pool pytree. Stacked: {"k": (L, nb, bs, H, dh), "v": ..., "pos":
+    (L, nb, bs)}; unrolled (non-uniform layer kinds): per-layer dicts
+    without the L axis.  All layers use full-length paged storage —
+    sliding windows are enforced by the attention mask, not a ring buffer
+    (documented simplification, DESIGN.md §7)."""
+    from repro.layers.attention import attention_layout
+    from repro.models.transformer import layer_kinds, uniform_kinds
+
+    lay = attention_layout(tp, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
+    h_global = lay.kv_store * tp
+    dt = jnp.dtype(cfg.dtype)
+    scan = (pcfg is None or pcfg.scan_layers) and uniform_kinds(cfg)
+
+    def one(lead):
+        return {
+            "k": jnp.zeros(lead + (num_blocks, block_size, h_global,
+                                   cfg.head_dim), dt),
+            "v": jnp.zeros(lead + (num_blocks, block_size, h_global,
+                                   cfg.head_dim), dt),
+            "pos": jnp.full(lead + (num_blocks, block_size), -1, jnp.int32),
+        }
+
+    if scan:
+        return one((cfg.num_layers,))
+    return {f"layer_{i}": one(()) for i in range(len(layer_kinds(cfg)))}
+
+
+def paged_cache_specs(cfg, pcfg):
+    """PartitionSpecs: the head axis shards over the model axis exactly like
+    the slot cache; the block axis is shared across all requests so it can
+    never shard over data — the paged path is the single-host serving path
+    (multi-pod serving keeps legacy slots, DESIGN.md §7)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.models.transformer import layer_kinds, uniform_kinds
+
+    def one(lead):
+        return {"k": P(*lead, None, None, "model", None),
+                "v": P(*lead, None, None, "model", None),
+                "pos": P(*lead, None, None)}
+
+    if pcfg.scan_layers and uniform_kinds(cfg):
+        return one((None,))
+    return {f"layer_{i}": one(()) for i in range(len(layer_kinds(cfg)))}
+
+
+def gather_block_rows(pool, block_tables):
+    """Rectangular per-request view of the pool.
+
+    block_tables: (B, max_blocks) int32, -1 = unallocated.
+    Returns rows with the SAME tree structure as the slot cache's gathered
+    rows — {"k": (L, B, max_blocks*bs, H, dh), ...} — so the model prefill
+    path consumes paged and slot caches identically.
+    """
+    bt = jnp.maximum(block_tables, 0)
+    valid = block_tables >= 0  # (B, nblk)
+
+    def gather_layer(layer, lead_l: bool):
+        if lead_l:
+            l, nb, bs = layer["pos"].shape
+            k = layer["k"][:, bt]                       # (L, B, nblk, bs, H, dh)
+            v = layer["v"][:, bt]
+            p = layer["pos"][:, bt]                     # (L, B, nblk, bs)
+            p = jnp.where(valid[None, :, :, None], p, -1)
+            b, nblk = bt.shape
+            return {"k": k.reshape(l, b, nblk * bs, *k.shape[4:]),
+                    "v": v.reshape(l, b, nblk * bs, *v.shape[4:]),
+                    "pos": p.reshape(l, b, nblk * bs)}
+        nb, bs = layer["pos"].shape
+        k = layer["k"][bt]
+        v = layer["v"][bt]
+        p = jnp.where(valid[:, :, None], layer["pos"][bt], -1)
+        b, nblk = bt.shape
+        return {"k": k.reshape(b, nblk * bs, *k.shape[3:]),
+                "v": v.reshape(b, nblk * bs, *v.shape[3:]),
+                "pos": p.reshape(b, nblk * bs)}
+
+    if _stacked(pool):
+        return gather_layer(pool, lead_l=True)
+    return {name: gather_layer(layer, lead_l=False)
+            for name, layer in pool.items()}
+
+
+def insert_chunk_paged(pool, kv_chunk, block_tables):
+    """Scatter a prefill chunk's KV through the block-table indirection.
+
+    stacked: kv_chunk = (k, v, pos) with leading L axis, pos (L, B, S);
+    unrolled: {"layer_i": (k, v, pos)} with pos (B, S).  Tokens with
+    pos < 0 (padding) are dropped via an OOB physical index.
+    """
+    if not _stacked(pool):
+        return {name: _insert_layer(pool[name], kv_chunk[name], block_tables)
+                for name in pool}
+    k, v, pos = kv_chunk
+    nb, bs = pool["pos"].shape[1:3]
+    p = pos[0]                                    # (B, S) — same across L
+    blk = jnp.where(p >= 0, p // bs, 0)
+    phys = jnp.take_along_axis(block_tables, blk, axis=1)      # (B, S)
+    phys = jnp.where((p >= 0) & (phys >= 0), phys, nb)         # OOB -> drop
+    off = jnp.where(p >= 0, p % bs, 0)
+    return {"k": pool["k"].at[:, phys, off].set(k, mode="drop"),
+            "v": pool["v"].at[:, phys, off].set(v, mode="drop"),
+            "pos": pool["pos"].at[:, phys, off].set(pos, mode="drop")}
+
+
+def _insert_layer(layer, kv, block_tables):
+    k, v, pos = kv                                # pos (B, S)
+    nb, bs = layer["pos"].shape
+    blk = jnp.where(pos >= 0, pos // bs, 0)
+    phys = jnp.take_along_axis(block_tables, blk, axis=1)
+    phys = jnp.where((pos >= 0) & (phys >= 0), phys, nb)
+    off = jnp.where(pos >= 0, pos % bs, 0)
+    return {"k": layer["k"].at[phys, off].set(k, mode="drop"),
+            "v": layer["v"].at[phys, off].set(v, mode="drop"),
+            "pos": layer["pos"].at[phys, off].set(pos, mode="drop")}
+
+
+def reset_blocks(pool, block_ids):
+    """Invalidate recycled blocks (pos = -1) so stale entries from a prior
+    owner can never be attended by the next request."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+    if not _stacked(pool):
+        return {name: dict(l, pos=l["pos"].at[ids].set(-1))
+                for name, l in pool.items()}
+    return dict(pool, pos=pool["pos"].at[:, ids].set(-1))
+
+
+def copy_blocks(pool, copies: Sequence[Tuple[int, int]]):
+    """Apply queued copy-on-write copies [(src, dst), ...] to the pool."""
+    if not copies:
+        return pool
+    src = jnp.asarray([s for s, _ in copies], jnp.int32)
+    dst = jnp.asarray([d for _, d in copies], jnp.int32)
+    if not _stacked(pool):
+        return {name: jax.tree.map(lambda a: a.at[dst].set(a[src]), layer)
+                for name, layer in pool.items()}
+    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pool)
+
+
+# ==========================================================================
+# host side: allocator + manager
+# ==========================================================================
+
+class BlockAllocator:
+    """Refcounted physical-block allocator with an LRU of evictable
+    prefix-cached blocks.
+
+    Invariants (exercised by tests/test_paging.py):
+      * a block is in exactly one of {free, cached_free, referenced}
+      * refcount > 0 blocks are NEVER evicted or handed out by alloc()
+      * eviction only recycles cached_free blocks (refcount 0), oldest
+        first, and drops their prefix-cache hash via the on_evict hook
+    """
+
+    def __init__(self, num_blocks: int, on_evict=None):
+        self.num_blocks = num_blocks
+        self.free: deque = deque(range(num_blocks))
+        self.cached_free: "OrderedDict[int, None]" = OrderedDict()
+        self.ref = [0] * num_blocks
+        self.on_evict = on_evict or (lambda b: None)
+
+    # ---- queries ---------------------------------------------------------
+    def num_available(self) -> int:
+        return len(self.free) + len(self.cached_free)
+
+    def refcount(self, b: int) -> int:
+        return self.ref[b]
+
+    # ---- alloc/free ------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        """A fresh block for new content; returns None when exhausted.
+        The caller must reset the block's pos if it came from eviction —
+        alloc reports this by leaving the block's hash dropped."""
+        if self.free:
+            b = self.free.popleft()
+        elif self.cached_free:
+            b, _ = self.cached_free.popitem(last=False)   # LRU
+            self.on_evict(b)      # eviction accounting lives in the hook
+        else:
+            return None
+        assert self.ref[b] == 0
+        self.ref[b] = 1
+        return b
+
+    def share(self, b: int) -> None:
+        """Take a reference on a prefix-cache hit. Revives a cached_free
+        block (contents intact) or adds a reader to a live one."""
+        if b in self.cached_free:
+            del self.cached_free[b]
+        self.ref[b] += 1
+
+    def decref(self, b: int, cached: bool) -> bool:
+        """Drop a reference; returns True when the block became free.
+        ``cached``: block is registered in the prefix cache, so park it in
+        the LRU (still hittable) instead of the plain free list."""
+        assert self.ref[b] > 0, f"double free of block {b}"
+        self.ref[b] -= 1
+        if self.ref[b] > 0:
+            return False
+        if cached:
+            self.cached_free[b] = None        # lands at the MRU end
+        else:
+            self.free.append(b)
+        return True
+
+
+@dataclasses.dataclass
+class PagingStats:
+    hit_tokens: int = 0          # prefill tokens skipped via prefix cache
+    miss_tokens: int = 0         # prefill tokens actually computed
+    evictions: int = 0
+    preemptions: int = 0
+    cow_copies: int = 0
+    registered_blocks: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hit_tokens + self.miss_tokens
+        return self.hit_tokens / tot if tot else 0.0
+
+
+class BlockManager:
+    """Per-engine paging state: block tables keyed by request id, the
+    allocator, the prefix cache, and the queues of device-side fixups
+    (block resets, COW copies) the engine drains each step."""
+
+    def __init__(self, num_blocks: int, block_size: int,
+                 max_blocks_per_req: int, prefix_caching: bool = True):
+        self.block_size = block_size
+        self.max_blocks_per_req = max_blocks_per_req
+        self.prefix = PrefixCache()
+        self.alloc = BlockAllocator(num_blocks,
+                                    on_evict=self._on_evict)
+        self.tables: Dict[int, List[int]] = {}     # rid -> physical blocks
+        # rid -> (blocks hashed so far, last chain hash): registration
+        # resumes the chain instead of re-hashing the whole context
+        self._reg_cursor: Dict[int, Tuple[int, Optional[int]]] = {}
+        self.stats = PagingStats()
+        self._pending_resets: List[int] = []
+        self._pending_copies: List[Tuple[int, int]] = []
+        self.prefix_caching = prefix_caching
+
+    # ---- device fixup queues --------------------------------------------
+    def _on_evict(self, b: int) -> None:
+        self.prefix.drop_block(b)
+        self._pending_resets.append(b)
+        self.stats.evictions += 1
+
+    def take_pending_resets(self) -> List[int]:
+        out, self._pending_resets = self._pending_resets, []
+        return out
+
+    def take_pending_copies(self) -> List[Tuple[int, int]]:
+        out, self._pending_copies = self._pending_copies, []
+        return out
+
+    # ---- admission -------------------------------------------------------
+    def blocks_needed(self, n_tokens: int) -> int:
+        bs = self.block_size
+        return (n_tokens + bs - 1) // bs
+
+    def allocate_prompt(self, rid: int, context: Sequence[int], *,
+                        headroom: int = 1) -> int:
+        """Build the request's block table: share prefix-hit blocks, then
+        allocate private blocks for the miss suffix, requiring ``headroom``
+        spare blocks to remain (decode growth).  Returns hit tokens
+        (always < len(context): at least one token is recomputed so the
+        engine has logits to sample the first output from).  Returns -1
+        and rolls back when the pool cannot cover it (caller defers or
+        preempts)."""
+        assert rid not in self.tables
+        bs = self.block_size
+        hit_blocks: List[int] = []
+        if self.prefix_caching:
+            hit_blocks = self.prefix.match(chain_hashes(context, bs))
+        if len(hit_blocks) * bs >= len(context):   # leave >= 1 miss token
+            hit_blocks = hit_blocks[:-1]
+        table = []
+        for b in hit_blocks:
+            self.alloc.share(b)
+            table.append(b)
+        n_total = self.blocks_needed(len(context))
+        ok = True
+        for _ in range(n_total - len(hit_blocks)):
+            b = self.alloc.alloc()
+            if b is None:
+                ok = False
+                break
+            table.append(b)
+        if ok and self.alloc.num_available() < headroom:
+            ok = False
+        if not ok:
+            for b in table:
+                self.alloc.decref(b, cached=self.prefix.is_cached(b))
+            return -1
+        self.tables[rid] = table
+        hit = len(hit_blocks) * bs
+        self.stats.hit_tokens += hit
+        self.stats.miss_tokens += len(context) - hit
+        return hit
+
+    # ---- decode growth + COW --------------------------------------------
+    def ensure_writable(self, rid: int, position: int) -> bool:
+        """Guarantee the block holding ``position`` exists and is private.
+        Grows the table (alloc) and copy-on-writes a shared target.
+        Returns False when a needed allocation fails (caller preempts)."""
+        table = self.tables[rid]
+        idx = position // self.block_size
+        assert idx <= len(table), (rid, position, len(table))
+        if idx == len(table):
+            if idx >= self.max_blocks_per_req:
+                return False   # context at the cache ceiling; caller stops
+            b = self.alloc.alloc()
+            if b is None:
+                return False
+            table.append(b)
+            return True
+        b = table[idx]
+        if self.alloc.refcount(b) > 1:            # shared -> copy-on-write
+            nb = self.alloc.alloc()
+            if nb is None:
+                return False
+            self._pending_copies.append((b, nb))
+            self.alloc.decref(b, cached=self.prefix.is_cached(b))
+            table[idx] = nb
+            self.stats.cow_copies += 1
+        return True
+
+    # ---- prefix-cache registration --------------------------------------
+    def register_filled(self, rid: int, context: Sequence[int],
+                        n_written: int) -> None:
+        """Register every full block covered by the first ``n_written``
+        context tokens.  First writer wins; an already-cached hash leaves
+        the request's private block unregistered."""
+        if not self.prefix_caching:
+            return
+        table = self.tables[rid]
+        bs = self.block_size
+        done, prev = self._reg_cursor.get(rid, (0, None))
+        n_full = n_written // bs
+        if n_full <= done:
+            return
+        new_hashes = chain_hashes(context[:n_full * bs], bs,
+                                  start_block=done, prev=prev)
+        for j, h in enumerate(new_hashes):
+            i = done + j
+            existing = self.prefix.lookup(h)
+            if existing is not None:
+                continue
+            if self.prefix.is_cached(table[i]):   # already holds a hash
+                continue
+            if self.prefix.register(h, table[i]):
+                self.stats.registered_blocks += 1
+        self._reg_cursor[rid] = (n_full, new_hashes[-1])
+
+    # ---- release ---------------------------------------------------------
+    def free_request(self, rid: int) -> None:
+        """Drop all references; uncached blocks are queued for a pos reset
+        so their stale entries can never leak into the next owner."""
+        table = self.tables.pop(rid, None)
+        self._reg_cursor.pop(rid, None)
+        if table is None:
+            return
+        for b in table:
+            cached = self.prefix.is_cached(b)
+            freed = self.alloc.decref(b, cached=cached)
+            if freed and not cached:
+                self._pending_resets.append(b)
+
+    # ---- block-table export ---------------------------------------------
+    def table_array(self, rid: int):
+        """Static-shape int32 table row (-1 padded) for device use."""
+        import numpy as np
+        row = np.full(self.max_blocks_per_req, -1, np.int32)
+        t = self.tables.get(rid, ())
+        row[:len(t)] = t
+        return row

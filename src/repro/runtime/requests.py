@@ -22,19 +22,37 @@ class Request:
     max_new_tokens: int
     state: State = State.WAITING
     slot: Optional[int] = None
-    prefill_pos: int = 0              # tokens already prefilled
+    prefill_pos: int = 0              # context tokens already in cache
     output: List[int] = dataclasses.field(default_factory=list)
     arrival_step: int = 0
     first_token_step: Optional[int] = None
     done_step: Optional[int] = None
+    # --- paged-cache / preemption bookkeeping ---
+    resumed: bool = False             # re-prefilling after preemption
+    preemptions: int = 0
+    prompt_hit_tokens: int = 0        # prefix-cache hit at last admission
+
+    @property
+    def context_tokens(self) -> List[int]:
+        """Tokens that must be in the cache before the next decode step.
+        After a recompute-preemption the generated tokens are part of the
+        context; the last output token is the pending (not yet inserted)
+        decode input, so it is excluded."""
+        if self.resumed and self.output:
+            return self.prompt + self.output[:-1]
+        return self.prompt
 
     @property
     def length(self) -> int:
+        """Context length + pending sampled token (decode write position
+        is ``length - 1``)."""
+        if self.state == State.DECODE:
+            return len(self.prompt) + len(self.output)
         return self.prefill_pos + len(self.output)
 
     @property
     def prefill_done(self) -> bool:
-        return self.prefill_pos >= len(self.prompt)
+        return self.prefill_pos >= len(self.context_tokens)
 
 
 def fixed_trace(n_requests: int, input_len: int, output_len: int,

@@ -1,4 +1,5 @@
-"""Iteration-level scheduler with Sarathi-style chunked prefill.
+"""Iteration-level scheduler with Sarathi-style chunked prefill and
+(optionally) paged-KV admission control.
 
 Each engine iteration the scheduler emits:
   * a decode batch: one token for every DECODE-state request (if any), and
@@ -11,6 +12,18 @@ simplification vs. packed ragged hybrid batches, DESIGN.md §6). TokenWeave
 is applied inside the model per batch: chunks >= ``tokenweave_min_tokens``
 take the two-split weave; small decode batches fall back to the unsplit
 fused kernel — the same policy the paper uses for vLLM integration.
+
+Paged mode (``SchedulerConfig.paged``) changes admission and accounting:
+
+* a request is admitted only when the block manager has room for its miss
+  suffix plus one decode block (FIFO head-of-line; no skipping, so no
+  starvation), and its ``prefill_pos`` starts at the prefix-cache hit
+  length — so only MISS tokens are charged against ``chunk_tokens`` and
+  the weave-threshold decision (``tokenweave_min_tokens``) sees the true
+  compute size of the batch, not the nominal prompt size.
+* a running request can be preempted (DECODE -> WAITING, recompute): its
+  blocks are freed and it re-enters the queue front with its generated
+  tokens folded into the context (``Request.resumed``).
 """
 from __future__ import annotations
 
@@ -26,6 +39,19 @@ class SchedulerConfig:
     chunk_tokens: int = 2048        # Sarathi chunk budget (vLLM default 2k)
     max_len: int = 4096
     prefill_bucket: int = 64        # chunk lengths rounded to this multiple
+    # --- paged KV cache (vLLM-style block pool) ---
+    paged: bool = False
+    block_size: int = 16            # tokens per KV block
+    num_blocks: int = 0             # 0 -> max_batch * ceil(max_len/block)
+    prefix_caching: bool = True
+
+    @property
+    def max_blocks_per_req(self) -> int:
+        return -(-self.max_len // self.block_size)
+
+    @property
+    def effective_num_blocks(self) -> int:
+        return self.num_blocks or self.max_batch * self.max_blocks_per_req
 
 
 @dataclasses.dataclass
@@ -35,8 +61,9 @@ class ScheduleStep:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig):
+    def __init__(self, cfg: SchedulerConfig, block_mgr=None):
         self.cfg = cfg
+        self.block_mgr = block_mgr          # BlockManager when cfg.paged
         self.waiting: List[Request] = []
         self.active: List[Optional[Request]] = [None] * cfg.max_batch
         self.finished: List[Request] = []
@@ -52,10 +79,36 @@ class Scheduler:
         for slot in self._free_slots():
             if not self.waiting:
                 break
-            req = self.waiting.pop(0)
+            req = self.waiting[0]
+            if self.block_mgr is not None:
+                # one-shot: prefix-match + allocate (+1 decode-block
+                # headroom), rolled back atomically on failure.
+                # FIFO head-of-line: no skipping, so no starvation
+                hit = self.block_mgr.allocate_prompt(req.rid,
+                                                     req.context_tokens)
+                if hit < 0:
+                    break
+                req.prefill_pos = hit
+                req.prompt_hit_tokens = hit
+            self.waiting.pop(0)
             req.slot = slot
             req.state = State.PREFILL
             self.active[slot] = req
+
+    # ---- preemption ------------------------------------------------------
+    def preempt(self, req: Request):
+        """Recompute-mode preemption: blocks are gone (the engine freed
+        them); the request re-prefills prompt + generated-so-far on its
+        next admission.  Front of the queue so it resumes first."""
+        assert req.state in (State.DECODE, State.PREFILL)
+        self.active[req.slot] = None
+        req.slot = None
+        req.state = State.WAITING
+        req.prefill_pos = 0
+        req.prompt_hit_tokens = 0
+        req.preemptions += 1
+        req.resumed = bool(req.output)
+        self.waiting.insert(0, req)
 
     # ---- one iteration ----------------------------------------------------
     def next_step(self) -> Optional[ScheduleStep]:
@@ -69,8 +122,10 @@ class Scheduler:
         if prefilling:
             budget = self.cfg.chunk_tokens
             b = self.cfg.prefill_bucket
-            # chunk length: bucketized max remaining, capped by the budget
-            remains = [len(r.prompt) - r.prefill_pos for r in prefilling]
+            # chunk length: bucketized max remaining MISS tokens, capped by
+            # the budget (prefix-hit tokens are never re-charged)
+            remains = [len(r.context_tokens) - r.prefill_pos
+                       for r in prefilling]
             chunk = min(budget, max(remains))
             chunk = min(max(b, ((chunk + b - 1) // b) * b), budget)
             group, n_tok = [], 0

@@ -1,0 +1,9 @@
+"""Auto-loaded by the interpreter when src/ is on PYTHONPATH (site.py
+imports ``sitecustomize`` from the first path entry that has one).  Installs
+the jax version-compat shims before any user code runs, so test subprocess
+snippets can call ``jax.make_mesh(..., axis_types=...)`` / ``jax.shard_map``
+without importing repro first."""
+try:
+    import repro.compat  # noqa: F401  (import side effect: compat.install())
+except Exception:  # pragma: no cover - never block interpreter startup
+    pass

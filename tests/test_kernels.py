@@ -60,6 +60,10 @@ def test_flash_attention_matches_oracle(b, sq, sk, kvh, g, dh, causal,
 def test_ring_ar_rmsnorm_multidevice(n, t, d, tmp_path):
     """The paper's fused AllReduce-RMSNorm kernel, validated on n simulated
     devices via the Pallas TPU interpret machinery (subprocess)."""
+    import jax.experimental.pallas.tpu as pltpu
+    if not hasattr(pltpu, "InterpretParams"):
+        pytest.skip("pre-0.5 pallas interpreter cannot emulate the "
+                    "remote-DMA ring kernel (semaphore tracer bug)")
     from conftest import run_distributed
     code = f"""
 import jax, jax.numpy as jnp, numpy as np

@@ -1,38 +1,12 @@
-"""Property tests for wave-aware smart-splitting (paper §3.1.1)."""
-import math
+"""Deterministic tests for wave-aware smart-splitting (paper §3.1.1).
 
-from hypothesis import given, settings, strategies as st
+The hypothesis property tests live in test_splitting_props.py (skipped
+cleanly when hypothesis is missing); these cases always run so splitting
+never loses coverage."""
+import math
 
 from repro.core.splitting import (naive_split, pad_to_multiple, smart_split,
                                   split_sizes_for_batch, wave_count)
-
-
-@given(n=st.integers(1, 10_000_000), unit=st.integers(1, 4096))
-@settings(max_examples=300, deadline=None)
-def test_smart_split_invariants(n, unit):
-    s = smart_split(n, unit)
-    if s is None:
-        assert n < 2 * unit
-        return
-    l1, l2 = s
-    assert l1 + l2 == n
-    assert l1 > 0 and l2 > 0
-    # prefix split is full waves only
-    assert l1 % unit == 0
-    # the paper's wave-conservation property
-    assert wave_count(l1, unit) + wave_count(l2, unit) == wave_count(n, unit)
-
-
-@given(n=st.integers(2, 1_000_000), unit=st.integers(1, 2048))
-@settings(max_examples=200, deadline=None)
-def test_naive_split_can_add_waves_smart_never(n, unit):
-    e1, e2 = naive_split(n)
-    naive_waves = wave_count(e1, unit) + wave_count(e2, unit)
-    assert naive_waves >= wave_count(n, unit)  # never fewer
-    s = smart_split(n, unit)
-    if s is not None:
-        l1, l2 = s
-        assert wave_count(l1, unit) + wave_count(l2, unit) <= naive_waves
 
 
 def test_paper_example_300_ctas_132_sms():
@@ -43,22 +17,47 @@ def test_paper_example_300_ctas_132_sms():
     assert wave_count(300, 132) == 3
 
 
-@given(n=st.integers(1, 500_000), unit=st.integers(8, 512),
-       rows=st.integers(1, 64), min_tokens=st.integers(0, 4096))
-@settings(max_examples=200, deadline=None)
-def test_split_sizes_for_batch(n, unit, rows, min_tokens):
-    s = split_sizes_for_batch(n, unit=unit, min_tokens=min_tokens,
-                              row_multiple=rows)
-    if s is None:
-        return
+def test_smart_split_invariants_grid():
+    """Exhaustive small grid of the hypothesis invariants."""
+    for unit in (1, 3, 8, 132, 256):
+        for n in list(range(1, 4 * unit + 3)) + [10 * unit + 7]:
+            s = smart_split(n, unit)
+            if s is None:
+                assert n < 2 * unit
+                continue
+            l1, l2 = s
+            assert l1 + l2 == n
+            assert l1 > 0 and l2 > 0
+            assert l1 % unit == 0                  # prefix = full waves
+            # wave conservation: the split never adds a wave
+            assert wave_count(l1, unit) + wave_count(l2, unit) \
+                == wave_count(n, unit)
+
+
+def test_naive_split_adds_waves_smart_never():
+    # 300 on unit 132: naive pays 4 waves, smart pays 3
+    e1, e2 = naive_split(300)
+    assert wave_count(e1, 132) + wave_count(e2, 132) == 4
+    l1, l2 = smart_split(300, 132)
+    assert wave_count(l1, 132) + wave_count(l2, 132) == 3
+
+
+def test_split_sizes_for_batch_deterministic():
+    # below min_tokens: no split
+    assert split_sizes_for_batch(256, unit=256, min_tokens=512,
+                                 row_multiple=1) is None
+    # split point must respect lcm(unit, rows)
+    s = split_sizes_for_batch(4096, unit=256, min_tokens=512, row_multiple=3)
+    assert s is not None
     l1, l2 = s
-    assert l1 + l2 == n
-    assert l1 % math.lcm(unit, rows) == 0
-    assert n >= min_tokens
+    assert l1 + l2 == 4096
+    assert l1 % math.lcm(256, 3) == 0
+    # 2 rows of 1024 tokens, unit 256: clean halves
+    assert split_sizes_for_batch(2048, unit=256, min_tokens=512,
+                                 row_multiple=2) == (1024, 1024)
 
 
-@given(n=st.integers(0, 1_000_000), m=st.integers(1, 4096))
-@settings(max_examples=100, deadline=None)
-def test_pad_to_multiple(n, m):
-    p = pad_to_multiple(n, m)
-    assert p >= n and p % m == 0 and p - n < m
+def test_pad_to_multiple_deterministic():
+    for n, m, want in [(0, 8, 0), (1, 8, 8), (8, 8, 8), (9, 8, 16),
+                       (255, 256, 256), (257, 256, 512)]:
+        assert pad_to_multiple(n, m) == want
