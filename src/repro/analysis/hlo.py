@@ -22,7 +22,6 @@ the computation call graph instead:
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

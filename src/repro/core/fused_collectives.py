@@ -24,7 +24,6 @@ Modes:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -2,9 +2,6 @@
 fallback (CPU container / dry-run lowering, mathematically identical)."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.kernels import ref as kref
 from repro.kernels.fused_rmsnorm import fused_residual_rmsnorm_pallas
 

@@ -26,9 +26,7 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 

@@ -24,7 +24,6 @@ All attention math runs per (batch, head) in fp32 accumulation.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Optional, Tuple
 
@@ -134,8 +133,8 @@ def _attn_ref(q, k, v, qpos, kpos, *, causal, window, sm_scale):
     logits = jnp.where(mask[:, None, None], logits, NEG_INF)
     m = jnp.max(logits, axis=-1, keepdims=True)
     p = jnp.exp(logits - m)
-    l = jnp.sum(p, axis=-1, keepdims=True)
-    out = jnp.einsum("bhgqk,bkhd->bqhgd", p / jnp.maximum(l, 1e-30),
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p / jnp.maximum(denom, 1e-30),
                      v.astype(jnp.float32))
     return out.astype(q.dtype)
 
@@ -297,7 +296,15 @@ def attn_decode(params, x, cache, *, positions, cfg, lay: AttnLayout, theta,
     sliding window. ``seq_axis`` (axis name) enables context-parallel KV:
     each dp shard owns C_local slots; partial softmax stats are combined with
     pmax/psum (flash-decoding across chips).
+
+    Without ``seq_axis`` this is exactly the S_v == 1 case of
+    ``attn_verify`` (one slot-scatter implementation, shared epilogue);
+    only the context-parallel branch lives here.
     """
+    if seq_axis is None:
+        return attn_verify(params, x, cache, positions=positions, cfg=cfg,
+                           lay=lay, theta=theta, window=window,
+                           mrope_positions=mrope_positions)
     b = x.shape[0]
     q, k_new, v_new = _project_qkv(params, x, cfg, lay, positions=positions,
                                    theta=theta,
@@ -305,34 +312,24 @@ def attn_decode(params, x, cache, *, positions, cfg, lay: AttnLayout, theta,
     c = cache["k"].shape[1]
     pos = positions[:, 0]  # (B,)
 
-    if seq_axis is None:
-        # rows with pos < 0 are inactive (e.g. still prefilling in another
-        # engine lane): drop their writes instead of clobbering slot c-1
-        slot = jnp.where(pos >= 0, pos % c, c).astype(jnp.int32)
-        bidx = jnp.arange(b)
-        k_c = cache["k"].at[bidx, slot].set(k_new[:, 0], mode="drop")
-        v_c = cache["v"].at[bidx, slot].set(v_new[:, 0], mode="drop")
-        p_c = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32),
-                                              mode="drop")
-    else:
-        # context parallel: slot `pos % (C_local * n)` lives on shard pos//C_local
-        names = (seq_axis,) if isinstance(seq_axis, str) else tuple(seq_axis)
-        n = 1
-        me = jnp.zeros((), jnp.int32)
-        for nm in names:
-            n = n * lax.axis_size(nm)
-            me = me * lax.axis_size(nm) + lax.axis_index(nm)
-        gslot = (pos % (c * n)).astype(jnp.int32)
-        owner = gslot // c
-        lslot = gslot % c
-        mine = (owner == me)[:, None, None]
-        bidx = jnp.arange(b)
-        k_upd = cache["k"].at[bidx, lslot].set(k_new[:, 0])
-        v_upd = cache["v"].at[bidx, lslot].set(v_new[:, 0])
-        p_upd = cache["pos"].at[bidx, lslot].set(pos.astype(jnp.int32))
-        k_c = jnp.where(mine[..., None], k_upd, cache["k"])
-        v_c = jnp.where(mine[..., None], v_upd, cache["v"])
-        p_c = jnp.where(mine[:, :, 0], p_upd, cache["pos"])
+    # context parallel: slot `pos % (C_local * n)` lives on shard pos//C_local
+    names = (seq_axis,) if isinstance(seq_axis, str) else tuple(seq_axis)
+    n = 1
+    me = jnp.zeros((), jnp.int32)
+    for nm in names:
+        n = n * lax.axis_size(nm)
+        me = me * lax.axis_size(nm) + lax.axis_index(nm)
+    gslot = (pos % (c * n)).astype(jnp.int32)
+    owner = gslot // c
+    lslot = gslot % c
+    mine = (owner == me)[:, None, None]
+    bidx = jnp.arange(b)
+    k_upd = cache["k"].at[bidx, lslot].set(k_new[:, 0])
+    v_upd = cache["v"].at[bidx, lslot].set(v_new[:, 0])
+    p_upd = cache["pos"].at[bidx, lslot].set(pos.astype(jnp.int32))
+    k_c = jnp.where(mine[..., None], k_upd, cache["k"])
+    v_c = jnp.where(mine[..., None], v_upd, cache["v"])
+    p_c = jnp.where(mine[:, :, 0], p_upd, cache["pos"])
 
     partial = _decode_attn_math(params, q, k_c, v_c, p_c, positions,
                                 x_dtype=x.dtype, cfg=cfg, lay=lay,
@@ -342,34 +339,35 @@ def attn_decode(params, x, cache, *, positions, cfg, lay: AttnLayout, theta,
 
 def _decode_attn_math(params, q, k, v, kpos, positions, *, x_dtype, cfg,
                       lay: AttnLayout, window, seq_axis=None):
-    """Shared single-token decode epilogue: grouped-QK logits, masked
-    stable softmax (optionally flash-decoding combined over a
-    context-parallel ``seq_axis``), V accumulate, output projection.
-    q: (B, 1*h_loc, dh) grouped internally; k/v: (B, C, kvh, dh)."""
-    b = q.shape[0]
+    """Shared decode/verify epilogue: grouped-QK logits, masked stable
+    softmax (optionally flash-decoding combined over a context-parallel
+    ``seq_axis``), V accumulate, output projection.
+    q: (B, Sq, h_loc, dh) grouped internally (Sq == 1 for plain decode,
+    gamma+1 for the speculative verify window); k/v: (B, C, kvh, dh)."""
+    b, sq = q.shape[0], q.shape[1]
     kvh = k.shape[2]
-    g = q.shape[2] // kvh
-    qg = q.reshape(b, 1, kvh, g, cfg.head_dim)
+    g = lay.h_loc // kvh
+    qg = q.reshape(b, sq, kvh, g, cfg.head_dim)
     # bf16 operands + f32 accumulation (MXU-native) — pre-casting the cache
     # to f32 would round-trip the whole KV through HBM at double width
     logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
                         preferred_element_type=jnp.float32) \
         * (cfg.head_dim ** -0.5)
-    msk = _mask(positions, kpos, True, window)  # (B, 1, C)
+    msk = _mask(positions, kpos, True, window)  # (B, Sq, C)
     logits = jnp.where(msk[:, None, None], logits, NEG_INF)
     m = jnp.max(logits, axis=-1)
     if seq_axis is not None:
         m = lax.pmax(m, seq_axis)
     p = jnp.exp(logits - m[..., None])
-    l = jnp.sum(p, axis=-1)
+    denom = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     if seq_axis is not None:
         # flash-decoding combine across context-parallel shards
-        l = lax.psum(l, seq_axis)
+        denom = lax.psum(denom, seq_axis)
         acc = lax.psum(acc, seq_axis)
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
-    out = jnp.moveaxis(out, 3, 1).reshape(b, 1, lay.h_loc * cfg.head_dim)
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, lay.h_loc * cfg.head_dim)
     partial = jnp.einsum("bsf,fd->bsd", out.astype(x_dtype),
                          _sq(params["wo"]))
     if lay.replicas > 1:
@@ -391,20 +389,75 @@ def attn_decode_paged(params, x, pool_layer, block_tables, *, positions, cfg,
     paged layers have no ring buffer (DESIGN.md §7).  No ``seq_axis``:
     the shared block axis cannot shard over data, so the paged path is
     single-host (context-parallel decode stays on the slot path).
+
+    Exactly the S_v == 1 case of ``attn_verify_paged`` (one scatter/gather
+    implementation, shared epilogue).
+    """
+    return attn_verify_paged(params, x, pool_layer, block_tables,
+                             positions=positions, cfg=cfg, lay=lay,
+                             theta=theta, window=window,
+                             mrope_positions=mrope_positions)
+
+
+def attn_verify(params, x, cache, *, positions, cfg, lay: AttnLayout, theta,
+                window: int = 0, mrope_positions=None):
+    """Multi-token speculative-verify decode against the slot KV cache.
+
+    x: (B, S_v, d) — a causal window of gamma+1 tokens per request (the
+    pending decode input followed by the draft proposal; positions carry
+    -1 for inactive rows and unused draft slots, whose writes are dropped).
+    All S_v tokens are scattered into the cache FIRST, then attention runs
+    with the causal mask restricting each query to its own prefix — so the
+    epilogue is shared verbatim with ``attn_decode`` (the S_v == 1 case).
+
+    Multi-token windows (S_v > 1) require full-attention layers: a
+    sliding-window ring buffer (C == window) would let a later window
+    write evict a key an earlier query in the same window still needs.
+    The engine rejects spec decoding on the legacy backend for windowed
+    models; the paged backend stores full-length KV and enforces windows
+    by mask, so it is unaffected.  (S_v == 1 — plain ``attn_decode``
+    delegating here — is safe for any layer kind: one write, one query.)
+    """
+    b, s, _ = x.shape
+    q, k_new, v_new = _project_qkv(params, x, cfg, lay, positions=positions,
+                                   theta=theta,
+                                   mrope_positions=mrope_positions)
+    c = cache["k"].shape[1]
+    slot = jnp.where(positions >= 0, positions % c, c).astype(jnp.int32)
+    bidx = jnp.arange(b)[:, None]
+    k_c = cache["k"].at[bidx, slot].set(k_new, mode="drop")
+    v_c = cache["v"].at[bidx, slot].set(v_new, mode="drop")
+    p_c = cache["pos"].at[bidx, slot].set(positions.astype(jnp.int32),
+                                          mode="drop")
+    partial = _decode_attn_math(params, q, k_c, v_c, p_c, positions,
+                                x_dtype=x.dtype, cfg=cfg, lay=lay,
+                                window=window)
+    return partial, {"k": k_c, "v": v_c, "pos": p_c}
+
+
+def attn_verify_paged(params, x, pool_layer, block_tables, *, positions, cfg,
+                      lay: AttnLayout, theta, window: int = 0,
+                      mrope_positions=None):
+    """Multi-token speculative-verify decode against the paged block pool:
+    the gamma+1 window scatters through the block-table indirection (the
+    engine has already grown/COW'd every block the window touches), then
+    attention runs over the gathered rectangular view with the causal mask
+    ordering queries within the window.  Shares the epilogue with
+    ``attn_decode_paged``; same single-host restriction (DESIGN.md §7).
     """
     b = x.shape[0]
     q, k_new, v_new = _project_qkv(params, x, cfg, lay, positions=positions,
                                    theta=theta,
                                    mrope_positions=mrope_positions)
     nb, bs = pool_layer["pos"].shape
-    pos = positions[:, 0]  # (B,)
+    pos = positions                                        # (B, S_v)
 
     blk = jnp.where(pos >= 0, pos // bs, 0)
-    phys = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    phys = jnp.take_along_axis(block_tables, blk, axis=1)  # (B, S_v)
     phys = jnp.where((pos >= 0) & (phys >= 0), phys, nb)   # OOB -> dropped
     off = jnp.where(pos >= 0, pos % bs, 0)
-    k_c = pool_layer["k"].at[phys, off].set(k_new[:, 0], mode="drop")
-    v_c = pool_layer["v"].at[phys, off].set(v_new[:, 0], mode="drop")
+    k_c = pool_layer["k"].at[phys, off].set(k_new, mode="drop")
+    v_c = pool_layer["v"].at[phys, off].set(v_new, mode="drop")
     p_c = pool_layer["pos"].at[phys, off].set(pos.astype(jnp.int32),
                                               mode="drop")
 
@@ -459,9 +512,9 @@ def init_kv_cache(batch: int, max_len: int, cfg, tp: int, *, window: int = 0,
     leading layer axis (per-layer caches for unrolled models)."""
     lay = attention_layout(tp, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
     c = min(max_len, window) if window > 0 else max_len
-    l = layers if layers is not None else cfg.num_layers
+    nl = layers if layers is not None else cfg.num_layers
     dt = dtype or jnp.dtype(cfg.dtype)
-    lead = () if l == 0 else (l,)
+    lead = () if nl == 0 else (nl,)
     h_global = lay.kv_store * tp
     return {
         "k": jnp.zeros(lead + (batch, c, h_global, cfg.head_dim), dt),

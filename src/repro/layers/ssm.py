@@ -22,8 +22,6 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.layers.norms import rms_norm
-
 
 def _sq(p):
     return jnp.squeeze(p, axis=0)
@@ -61,9 +59,9 @@ def _ssm_scan_chunked(a, b, h0, chunk: int):
     a_c = jnp.moveaxis(a.reshape(bsz, n, q, *a.shape[2:]), 1, 0)
     b_c = jnp.moveaxis(b.reshape(bsz, n, q, *b.shape[2:]), 1, 0)
 
-    def op(l, r):
-        al, bl = l
-        ar, br = r
+    def op(left, right):
+        al, bl = left
+        ar, br = right
         return al * ar, br + ar * bl
 
     def step(h, xs):

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.models import encdec, hybrid, mamba_model, transformer
@@ -66,6 +66,11 @@ class ModelApi:
 
     def decode_step(self, params, tokens, cache, positions, **kw):
         return self.mod.decode_step(params, tokens, cache, cfg=self.cfg,
+                                    pcfg=self.pcfg, positions=positions, **kw)
+
+    def verify_step(self, params, tokens, cache, positions, **kw):
+        """Speculative multi-token verify (transformer families only)."""
+        return self.mod.verify_step(params, tokens, cache, cfg=self.cfg,
                                     pcfg=self.pcfg, positions=positions, **kw)
 
 

@@ -84,8 +84,9 @@ def param_specs(cfg: ModelConfig, pcfg: ParallelConfig):
            "cross": A.attention_param_specs(cfg, cross=True),
            "mlp": M.mlp_param_specs(cfg),
            "norm_attn": P(None), "norm_cross": P(None), "norm_ffn": P(None)}
-    stack = lambda t: jax.tree.map(lambda s: P(None, *s), t,
-                                   is_leaf=lambda s: isinstance(s, P))
+    def stack(t):
+        return jax.tree.map(lambda s: P(None, *s), t,
+                            is_leaf=lambda s: isinstance(s, P))
     return {
         "embedding": E.embedding_param_specs(cfg),
         "pos_enc": P(None), "pos_dec": P(None),

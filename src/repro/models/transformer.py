@@ -166,10 +166,21 @@ def _layer_split(lp, h, res, *, positions, mrope_positions, kind: LayerKind,
     if decode and block_tables is not None:
         # paged decode: cache_layer is one layer of the shared block pool;
         # the block-table indirection replaces per-slot rows (no seq_axis —
-        # the shared pool cannot shard over data, DESIGN.md §7)
-        a_part, kv_out = A.attn_decode_paged(
+        # the shared pool cannot shard over data, DESIGN.md §7).  S > 1 is
+        # the speculative gamma+1 verify window (DESIGN.md §8).
+        paged_attn = (A.attn_verify_paged if h.shape[1] > 1
+                      else A.attn_decode_paged)
+        a_part, kv_out = paged_attn(
             lp["attn"], h, cache_layer, block_tables, positions=positions,
             cfg=cfg, lay=lay, theta=kind.theta, window=kind.window,
+            mrope_positions=mrope_positions)
+    elif decode and h.shape[1] > 1:
+        # legacy-slot speculative verify window (no seq_axis: the verify
+        # scatter writes full rows locally; context-parallel KV keeps the
+        # plain decode path)
+        a_part, kv_out = A.attn_verify(
+            lp["attn"], h, cache_layer, positions=positions, cfg=cfg,
+            lay=lay, theta=kind.theta, window=kind.window,
             mrope_positions=mrope_positions)
     elif decode:
         seq_axis = (tuple(pcfg.dp_axes)
@@ -291,6 +302,14 @@ def _decide_split(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
         return None
     if decode:
         unit = max(tp, 8)
+        if s > 1:
+            # speculative verify: every batch row carries s = gamma+1
+            # tokens, so the paper's token threshold converts to rows —
+            # this is exactly how spec decoding pushes decode iterations
+            # across tokenweave_min_tokens (DESIGN.md §8)
+            min_rows = max(2 * unit, -(-pcfg.tokenweave_min_tokens // s))
+            return split_sizes_for_batch(b, unit=unit, min_tokens=min_rows,
+                                         row_multiple=1)
         return split_sizes_for_batch(b, unit=unit, min_tokens=2 * unit,
                                      row_multiple=1)
     unit = pcfg.split_unit_for(tp)
@@ -332,7 +351,9 @@ def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
     train: cache=None, decode=False (kv output suppressed via return_kv).
     prefill chunk: cache = existing KV cache (attended as prefix); the
         chunk's new kv is returned for the engine to insert.
-    decode: cache required; S == 1; returns the updated cache.
+    decode: cache required; S == 1, or S == gamma+1 for the speculative
+        verify window (multi-token causal decode attention); returns the
+        updated cache.
     block_tables: (B, max_blocks) int32 — switches decode to the paged
         block-pool cache layout (runtime/paging.py); prefill is unaffected
         (the engine pre-gathers the paged prefix into rectangular rows).
@@ -488,6 +509,22 @@ def decode_step(params, tokens, cache, *, cfg, pcfg, positions,
     """Single-token decode. Returns (logits local shard (B,1,V_loc),
     updated cache). ``block_tables`` selects the paged block-pool layout
     (cache = pool from runtime/paging.init_paged_cache)."""
+    h, new_cache, _ = forward(params, tokens, cfg=cfg, pcfg=pcfg,
+                              positions=positions,
+                              mrope_positions=mrope_positions, cache=cache,
+                              decode=True, block_tables=block_tables)
+    logits = E.lm_head_logits(params["embedding"], h)
+    return logits, new_cache
+
+
+def verify_step(params, tokens, cache, *, cfg, pcfg, positions,
+                mrope_positions=None, block_tables=None):
+    """Speculative multi-token verify: tokens (B, gamma+1) = the pending
+    decode input followed by the draft proposal, positions -1 where a row
+    has no (or a short) draft.  Returns (logits local shard
+    (B, gamma+1, V_loc) — one target distribution per window position —
+    and the updated cache with the whole window's KV written; the engine
+    rolls back rejected positions host-side, DESIGN.md §8)."""
     h, new_cache, _ = forward(params, tokens, cfg=cfg, pcfg=pcfg,
                               positions=positions,
                               mrope_positions=mrope_positions, cache=cache,

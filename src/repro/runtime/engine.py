@@ -22,6 +22,14 @@ Two KV-cache backends (SchedulerConfig.paged):
   min-token threshold sees true compute size.  Transformer families only
   (ssm state is not paged), single host (the shared pool cannot shard over
   the data axis) — DESIGN.md §7.
+
+Speculative decoding (``SchedulerConfig.spec_gamma > 0``, runtime/spec.py):
+decode iterations become gamma+1-token verify batches — a pluggable draft
+proposes, ONE multi-token forward scores the window, rejection sampling
+commits the longest accepted prefix + 1 token, and rejected KV is rolled
+back by block-table truncation (paged) or left to the
+overwrite-before-query invariant (legacy slots) — DESIGN.md §8.  Greedy
+spec output is token-identical to plain greedy decoding.
 """
 from __future__ import annotations
 
@@ -36,10 +44,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models.build import ModelApi
 from repro.runtime import kv_cache as KC
 from repro.runtime import paging as PG
+from repro.runtime import spec as SP
 from repro.runtime.paging import BlockManager
 from repro.runtime.requests import Request, State
 from repro.runtime.sampler import sample
 from repro.runtime.scheduler import Scheduler, SchedulerConfig
+from repro.runtime.spec import SpecStats
 
 
 @dataclasses.dataclass
@@ -48,22 +58,52 @@ class EngineStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     completed: int = 0
+    spec: SpecStats = dataclasses.field(default_factory=SpecStats)
 
 
 class Engine:
     def __init__(self, api: ModelApi, mesh, params, scfg: SchedulerConfig,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+                 draft: SP.DraftProposer | None = None, seed: int = 0):
         self.api = api
         self.mesh = mesh
         self.params = params
         self.scfg = scfg
         self.temperature = temperature
+        self.top_k = top_k
+        self.top_p = top_p
         self.stats = EngineStats()
         self._step_count = 0
         self._jit_cache: Dict = {}
         self._pspec = api.specs()
         self._is_ssm = api.cfg.family == "ssm"
         self.paged = bool(scfg.paged)
+
+        self.spec_gamma = int(scfg.spec_gamma)
+        self.draft = None
+        if self.spec_gamma:
+            if self._is_ssm:
+                raise ValueError("speculative decoding rolls back KV "
+                                 "positions; ssm state has no token axis")
+            if not hasattr(api.mod, "verify_step"):
+                raise ValueError(
+                    f"speculative decoding needs a multi-token verify path; "
+                    f"family {api.cfg.family!r} has none")
+            if api.pcfg.seq_shard_kv:
+                raise ValueError("speculative verify writes full KV rows "
+                                 "locally; disable seq_shard_kv")
+            if not self.paged and api.cfg.sliding_window:
+                raise ValueError(
+                    "legacy-slot sliding-window ring buffers cannot hold a "
+                    "multi-token verify window (a later write could evict a "
+                    "key an earlier query needs); use the paged backend")
+            self.draft = draft if draft is not None else SP.make_draft(
+                "ngram", self.spec_gamma, ngram=scfg.spec_ngram)
+            if self.draft.gamma < self.spec_gamma:
+                raise ValueError(
+                    f"draft gamma {self.draft.gamma} < scheduler "
+                    f"spec_gamma {self.spec_gamma}")
+        self._rng_key = jax.random.PRNGKey(seed)
 
         if self.paged:
             if self._is_ssm:
@@ -87,6 +127,13 @@ class Engine:
                                 is_leaf=lambda s: isinstance(s, P)))
         self._cspec = cspec
 
+    def _next_key(self):
+        """Per-dispatch PRNG key: one deterministic stream (seeded at
+        construction) feeds prefill, decode, and verify sampling alike, so
+        stochastic runs are reproducible for a fixed request order."""
+        self._rng_key, k = jax.random.split(self._rng_key)
+        return k
+
     # ------------------------------------------------------------------
     # jitted step functions
     # ------------------------------------------------------------------
@@ -97,7 +144,7 @@ class Engine:
         api = self.api
 
         def fn(params, cache, tokens, positions, slot_ids, offsets,
-               last_idx):
+               last_idx, rng):
             if self._is_ssm:
                 rows = jax.tree.map(lambda c: c[:, slot_ids], cache)
                 # fresh requests (offset 0) start from zero state
@@ -116,7 +163,8 @@ class Engine:
                 # length; we instead require ssm chunks to be unpadded
                 tok = sample(logits, vocab_size=api.cfg.vocab_size,
                              tp_axis=api.pcfg.tp_axis,
-                             temperature=self.temperature)
+                             temperature=self.temperature,
+                             top_k=self.top_k, top_p=self.top_p, key=rng)
                 return tok, new_cache
             rows = KC.gather_slots(cache, slot_ids)
             logits, kv, _ = api.mod.prefill(
@@ -125,12 +173,14 @@ class Engine:
             new_cache = KC.insert_chunk(cache, kv, offsets, slot_ids)
             tok = sample(logits, vocab_size=api.cfg.vocab_size,
                          tp_axis=api.pcfg.tp_axis,
-                         temperature=self.temperature)
+                         temperature=self.temperature,
+                         top_k=self.top_k, top_p=self.top_p, key=rng)
             return tok, new_cache
 
         sm = jax.shard_map(
             fn, mesh=self.mesh,
-            in_specs=(self._pspec, self._cspec, P(), P(), P(), P(), P()),
+            in_specs=(self._pspec, self._cspec, P(), P(), P(), P(), P(),
+                      P()),
             out_specs=(P(), self._cspec), check_vma=False)
         jfn = jax.jit(sm, donate_argnums=(1,))
         self._jit_cache[key] = jfn
@@ -142,7 +192,8 @@ class Engine:
             return self._jit_cache[key]
         api = self.api
 
-        def fn(params, pool, tokens, positions, block_tables, last_idx):
+        def fn(params, pool, tokens, positions, block_tables, last_idx,
+               rng):
             # rectangular context view through the block-table indirection;
             # the model's prefill path is backend-agnostic (rows look
             # exactly like gathered slot rows)
@@ -153,12 +204,13 @@ class Engine:
             new_pool = PG.insert_chunk_paged(pool, kv, block_tables)
             tok = sample(logits, vocab_size=api.cfg.vocab_size,
                          tp_axis=api.pcfg.tp_axis,
-                         temperature=self.temperature)
+                         temperature=self.temperature,
+                         top_k=self.top_k, top_p=self.top_p, key=rng)
             return tok, new_pool
 
         sm = jax.shard_map(
             fn, mesh=self.mesh,
-            in_specs=(self._pspec, self._cspec, P(), P(), P(), P()),
+            in_specs=(self._pspec, self._cspec, P(), P(), P(), P(), P()),
             out_specs=(P(), self._cspec), check_vma=False)
         jfn = jax.jit(sm, donate_argnums=(1,))
         self._jit_cache[key] = jfn
@@ -170,18 +222,19 @@ class Engine:
             return self._jit_cache[key]
         api = self.api
 
-        def fn(params, cache, tokens, positions):
+        def fn(params, cache, tokens, positions, rng):
             logits, new_cache = api.mod.decode_step(
                 params, tokens, cache, cfg=api.cfg, pcfg=api.pcfg,
                 positions=positions)
             tok = sample(logits, vocab_size=api.cfg.vocab_size,
                          tp_axis=api.pcfg.tp_axis,
-                         temperature=self.temperature)
+                         temperature=self.temperature,
+                         top_k=self.top_k, top_p=self.top_p, key=rng)
             return tok, new_cache
 
         sm = jax.shard_map(
             fn, mesh=self.mesh,
-            in_specs=(self._pspec, self._cspec, P(), P()),
+            in_specs=(self._pspec, self._cspec, P(), P(), P()),
             out_specs=(P(), self._cspec), check_vma=False)
         jfn = jax.jit(sm, donate_argnums=(1,))
         self._jit_cache[key] = jfn
@@ -193,19 +246,69 @@ class Engine:
             return self._jit_cache[key]
         api = self.api
 
-        def fn(params, pool, tokens, positions, block_tables):
+        def fn(params, pool, tokens, positions, block_tables, rng):
             logits, new_pool = api.mod.decode_step(
                 params, tokens, pool, cfg=api.cfg, pcfg=api.pcfg,
                 positions=positions, block_tables=block_tables)
             tok = sample(logits, vocab_size=api.cfg.vocab_size,
                          tp_axis=api.pcfg.tp_axis,
-                         temperature=self.temperature)
+                         temperature=self.temperature,
+                         top_k=self.top_k, top_p=self.top_p, key=rng)
             return tok, new_pool
 
         sm = jax.shard_map(
             fn, mesh=self.mesh,
-            in_specs=(self._pspec, self._cspec, P(), P(), P()),
+            in_specs=(self._pspec, self._cspec, P(), P(), P(), P()),
             out_specs=(P(), self._cspec), check_vma=False)
+        jfn = jax.jit(sm, donate_argnums=(1,))
+        self._jit_cache[key] = jfn
+        return jfn
+
+    def _verify_fn(self, s_v: int):
+        """Jitted speculative verify over the legacy slot cache: one
+        multi-token decode forward + on-device rejection sampling."""
+        key = ("verify", s_v)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        api = self.api
+
+        def fn(params, cache, tokens, positions, draft, rng):
+            logits, new_cache = api.verify_step(params, tokens, cache,
+                                                positions)
+            n_acc, emit = SP.verify_tokens(
+                logits, draft, rng, vocab_size=api.cfg.vocab_size,
+                tp_axis=api.pcfg.tp_axis, temperature=self.temperature,
+                top_k=self.top_k, top_p=self.top_p)
+            return n_acc, emit, new_cache
+
+        sm = jax.shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self._pspec, self._cspec, P(), P(), P(), P()),
+            out_specs=(P(), P(), self._cspec), check_vma=False)
+        jfn = jax.jit(sm, donate_argnums=(1,))
+        self._jit_cache[key] = jfn
+        return jfn
+
+    def _paged_verify_fn(self, s_v: int):
+        key = ("pverify", s_v)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        api = self.api
+
+        def fn(params, pool, tokens, positions, block_tables, draft, rng):
+            logits, new_pool = api.verify_step(params, tokens, pool,
+                                               positions,
+                                               block_tables=block_tables)
+            n_acc, emit = SP.verify_tokens(
+                logits, draft, rng, vocab_size=api.cfg.vocab_size,
+                tp_axis=api.pcfg.tp_axis, temperature=self.temperature,
+                top_k=self.top_k, top_p=self.top_p)
+            return n_acc, emit, new_pool
+
+        sm = jax.shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self._pspec, self._cspec, P(), P(), P(), P(), P()),
+            out_specs=(P(), P(), self._cspec), check_vma=False)
         jfn = jax.jit(sm, donate_argnums=(1,))
         self._jit_cache[key] = jfn
         return jfn
@@ -242,7 +345,10 @@ class Engine:
         if plan.prefill is not None:
             self._run_prefill(*plan.prefill)
         if plan.decode_slots:
-            self._run_decode()
+            if self.spec_gamma:
+                self._run_verify()
+            else:
+                self._run_decode()
         return True
 
     def run(self, max_steps: int = 100000) -> List[Request]:
@@ -329,14 +435,15 @@ class Engine:
             fn = self._paged_prefill_fn(b_sel, chunk)
             tok, self.cache = fn(self.params, self.cache,
                                  jnp.asarray(tokens), jnp.asarray(positions),
-                                 jnp.asarray(bt), jnp.asarray(last_idx))
+                                 jnp.asarray(bt), jnp.asarray(last_idx),
+                                 self._next_key())
         else:
             slot_ids = np.array([r.slot for r in group], np.int32)
             fn = self._prefill_fn(b_sel, chunk)
             tok, self.cache = fn(self.params, self.cache,
                                  jnp.asarray(tokens), jnp.asarray(positions),
                                  jnp.asarray(slot_ids), jnp.asarray(offsets),
-                                 jnp.asarray(last_idx))
+                                 jnp.asarray(last_idx), self._next_key())
         tok = np.asarray(tok)
         self.stats.prefill_tokens += int((positions >= 0).sum())
         for i, r in enumerate(group):
@@ -378,11 +485,12 @@ class Engine:
             fn = self._paged_decode_fn()
             tok, self.cache = fn(self.params, self.cache,
                                  jnp.asarray(tokens), jnp.asarray(positions),
-                                 jnp.asarray(bt))
+                                 jnp.asarray(bt), self._next_key())
         else:
             fn = self._decode_fn()
             tok, self.cache = fn(self.params, self.cache,
-                                 jnp.asarray(tokens), jnp.asarray(positions))
+                                 jnp.asarray(tokens), jnp.asarray(positions),
+                                 self._next_key())
         tok = np.asarray(tok)
         self.stats.decode_tokens += len(reqs)
         for r in list(reqs):
@@ -392,6 +500,108 @@ class Engine:
                 # a block just filled: make it hittable for future prompts
                 self.block_mgr.register_filled(
                     r.rid, r.prompt + r.output[:-1], n_written)
+            self._maybe_finish(r)
+
+    # ------------------------------------------------------------------
+    # speculative decoding (runtime/spec.py, DESIGN.md §8)
+    # ------------------------------------------------------------------
+    def _grow_for_draft(self, r: Request, want: int) -> int:
+        """Best-effort paged-block growth for the draft positions
+        ``length .. length-1+want``; on allocation failure the draft is
+        SHRUNK (draft tokens are optional) instead of preempting a peer.
+        Returns the number of draft tokens whose KV cell is writable."""
+        for j in range(1, want + 1):
+            if not self.block_mgr.ensure_writable(r.rid, r.length - 1 + j):
+                return j - 1
+        return want
+
+    def _run_verify(self):
+        """One speculative iteration over every DECODE request: draft
+        gamma tokens, run ONE gamma+1-token verify forward, commit the
+        longest accepted prefix + 1 corrected/bonus token, and roll back
+        the rejected suffix (paged: block-table truncation)."""
+        gamma = self.spec_gamma
+        if self.paged:
+            reqs = self._ensure_decode_blocks()   # input cell is mandatory
+            if not reqs:
+                return
+        else:
+            reqs = [r for r in self.sched.active
+                    if r is not None and r.state == State.DECODE]
+            if not reqs:
+                return
+
+        props = self.draft.propose(
+            [r.prompt + r.output for r in reqs])
+        capped: Dict[int, List[int]] = {}
+        for r, prop in zip(reqs, props):
+            # never draft past max_new_tokens (the verify always commits
+            # >= 1 extra token) or the cache ceiling
+            cap = min(gamma, r.max_new_tokens - len(r.output) - 1,
+                      self.scfg.max_len - r.length)
+            prop = list(prop[:max(cap, 0)])
+            if self.paged and prop:
+                prop = prop[:self._grow_for_draft(r, len(prop))]
+            capped[r.rid] = prop
+        if not any(capped.values()):
+            # nothing drafted anywhere: a gamma+1-wide verify would pay
+            # (gamma+1)x decode compute to commit one token per request —
+            # take the plain single-token decode step instead
+            self._run_decode()
+            return
+        if self.paged:
+            self._apply_fixups()
+
+        bmax = self.scfg.max_batch
+        s_v = gamma + 1
+        tokens = np.zeros((bmax, s_v), np.int32)
+        positions = np.full((bmax, s_v), -1, np.int32)
+        draft = np.full((bmax, gamma), -1, np.int32)
+        for r in reqs:
+            prop = capped[r.rid]
+            tokens[r.slot, 0] = r.output[-1]
+            positions[r.slot, 0] = r.length - 1
+            for j, d in enumerate(prop):
+                tokens[r.slot, 1 + j] = d
+                positions[r.slot, 1 + j] = r.length + j
+                draft[r.slot, j] = d
+
+        rng = self._next_key()
+        if self.paged:
+            bt = np.full((bmax, self.scfg.max_blocks_per_req), -1, np.int32)
+            for r in reqs:
+                bt[r.slot] = self.block_mgr.table_array(r.rid)
+            fn = self._paged_verify_fn(s_v)
+            n_acc, emit, self.cache = fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(positions), jnp.asarray(bt), jnp.asarray(draft),
+                rng)
+        else:
+            fn = self._verify_fn(s_v)
+            n_acc, emit, self.cache = fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(positions), jnp.asarray(draft), rng)
+        n_acc = np.asarray(n_acc)
+        emit = np.asarray(emit)
+
+        st = self.stats.spec
+        st.verify_steps += 1
+        for r in list(reqs):
+            prop = capped[r.rid]
+            n = min(int(n_acc[r.slot]), len(prop))
+            base_len = r.length          # L: window wrote L-1 .. L-1+|prop|
+            r.output.extend(prop[:n] + [int(emit[r.slot])])
+            st.draft_proposed += len(prop)
+            st.draft_accepted += n
+            st.emitted += n + 1
+            self.stats.decode_tokens += n + 1
+            if self.paged:
+                # rollback: keep exactly the blocks covering the committed
+                # context (positions 0 .. L-1+n); rejected draft KV beyond
+                # them is dropped with the tail blocks, never copied
+                self.block_mgr.truncate(r.rid, base_len + n)
+                self.block_mgr.register_filled(
+                    r.rid, r.prompt + r.output[:-1], base_len + n)
             self._maybe_finish(r)
 
     def _maybe_finish(self, r: Request):

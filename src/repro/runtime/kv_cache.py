@@ -88,7 +88,7 @@ def scatter_slots(cache, rows, slot_ids):
 def reset_slots(cache, slot_ids):
     """Invalidate slots (release finished requests): pos = -1."""
     if not _stacked(cache):
-        return {name: dict(l, pos=l["pos"].at[slot_ids].set(-1))
-                for name, l in cache.items()}
+        return {name: dict(lyr, pos=lyr["pos"].at[slot_ids].set(-1))
+                for name, lyr in cache.items()}
     new_p = cache["pos"].at[:, slot_ids].set(-1)
     return dict(cache, pos=new_p)

@@ -108,15 +108,15 @@ def gather_block_rows(pool, block_tables):
 
     def gather_layer(layer, lead_l: bool):
         if lead_l:
-            l, nb, bs = layer["pos"].shape
+            nl, nb, bs = layer["pos"].shape
             k = layer["k"][:, bt]                       # (L, B, nblk, bs, H, dh)
             v = layer["v"][:, bt]
             p = layer["pos"][:, bt]                     # (L, B, nblk, bs)
             p = jnp.where(valid[None, :, :, None], p, -1)
             b, nblk = bt.shape
-            return {"k": k.reshape(l, b, nblk * bs, *k.shape[4:]),
-                    "v": v.reshape(l, b, nblk * bs, *v.shape[4:]),
-                    "pos": p.reshape(l, b, nblk * bs)}
+            return {"k": k.reshape(nl, b, nblk * bs, *k.shape[4:]),
+                    "v": v.reshape(nl, b, nblk * bs, *v.shape[4:]),
+                    "pos": p.reshape(nl, b, nblk * bs)}
         nb, bs = layer["pos"].shape
         k = layer["k"][bt]
         v = layer["v"][bt]
@@ -171,8 +171,8 @@ def reset_blocks(pool, block_ids):
     owner can never be attended by the next request."""
     ids = jnp.asarray(block_ids, jnp.int32)
     if not _stacked(pool):
-        return {name: dict(l, pos=l["pos"].at[ids].set(-1))
-                for name, l in pool.items()}
+        return {name: dict(lyr, pos=lyr["pos"].at[ids].set(-1))
+                for name, lyr in pool.items()}
     return dict(pool, pos=pool["pos"].at[:, ids].set(-1))
 
 
@@ -403,6 +403,33 @@ class BlockManager:
             if self.prefix.register(h, table[i]):
                 self.stats.registered_blocks += 1
         self._reg_cursor[rid] = (n_full, new_hashes[-1])
+
+    # ---- speculative-decode rollback ------------------------------------
+    def truncate(self, rid: int, n_tokens: int) -> None:
+        """Shrink the request's block table to cover exactly the first
+        ``n_tokens`` context positions — the KV rollback after a partially
+        accepted verify window.  Blocks are append-only within a step, so
+        rejected draft tokens can only live in tail blocks that were grown
+        for the window: no copies, just decrefs.  Tail blocks are always
+        private (prefix-cache registration covers only committed full
+        blocks, and ``n_tokens`` never shrinks below the committed
+        context), so freed uncached blocks queue a pos reset exactly like
+        ``free_request``.  Stale cells left in the KEPT partial block are
+        harmless: the next write window starts at ``n_tokens`` and always
+        covers any queried position before it is attended (DESIGN.md §8).
+        """
+        table = self.tables[rid]
+        keep = self.blocks_needed(n_tokens)
+        assert keep >= 1, (rid, n_tokens)
+        done, _ = self._reg_cursor.get(rid, (0, None))
+        assert keep >= done, ("truncate below registered blocks",
+                              rid, keep, done)
+        while len(table) > keep:
+            b = table.pop()
+            cached = self.prefix.is_cached(b)
+            freed = self.alloc.decref(b, cached=cached)
+            if freed and not cached:
+                self._pending_resets.append(b)
 
     # ---- release ---------------------------------------------------------
     def free_request(self, rid: int) -> None:

@@ -1,4 +1,19 @@
-"""Token sampling over vocab-sharded logits (inside shard_map)."""
+"""Token sampling over vocab-sharded logits (inside shard_map).
+
+Everything here operates on the LOCAL vocab shard ``(B, S, V_loc)`` and
+composes cross-shard collectives (pmax/psum/all_gather) instead of ever
+materializing the full vocabulary on one shard:
+
+* greedy / Gumbel-max sampling -> ``sharded_argmax`` (tie-break to the
+  smallest id, deterministic across shards);
+* top-k -> the global k-th largest logit is found by all_gathering only the
+  per-shard top-k candidates (k*tp scalars, not V);
+* top-p (nucleus) -> the probability threshold is found by a fixed-depth
+  bisection on psum'd kept-mass (the nucleus set equals {p >= t*} where t*
+  is the probability of the token that crosses the cumulative target, so
+  thresholding reproduces the sorted-cumsum definition without a global
+  sort; the bisection resolves t* to ~2^-30 of the max probability).
+"""
 from __future__ import annotations
 
 import jax
@@ -7,23 +22,105 @@ from jax import lax
 
 from repro.layers.embedding import sharded_argmax
 
+NEG_INF = jnp.float32(-1e30)
+
+
+def _mask_vocab_pad(local_logits, *, vocab_size: int, tp_axis: str):
+    """f32 local logits with the padded vocab tail forced to -inf."""
+    v_loc = local_logits.shape[-1]
+    lo = lax.axis_index(tp_axis) * v_loc
+    col = lo + jnp.arange(v_loc)
+    shape = (1,) * (local_logits.ndim - 1) + (v_loc,)
+    return jnp.where((col < vocab_size).reshape(shape),
+                     local_logits.astype(jnp.float32), NEG_INF)
+
+
+def apply_top_k(local_logits, k: int, *, tp_axis: str = "model"):
+    """Mask local logits below the global k-th largest value to -inf.
+
+    Cross-shard cost: one all_gather of min(k, V_loc) candidates per shard.
+    Ties at the threshold are all kept (the set may exceed k on exact ties).
+    """
+    if k <= 0:
+        return local_logits
+    v_loc = local_logits.shape[-1]
+    k_loc = min(k, v_loc)
+    cand, _ = lax.top_k(local_logits, k_loc)          # (..., k_loc)
+    cand = lax.all_gather(cand, tp_axis, axis=-1, tiled=True)
+    k_eff = min(k, cand.shape[-1])
+    thresh = lax.top_k(cand, k_eff)[0][..., -1:]      # global k-th value
+    return jnp.where(local_logits >= thresh, local_logits, NEG_INF)
+
+
+def apply_top_p(local_logits, p: float, *, tp_axis: str = "model",
+                iters: int = 30):
+    """Nucleus filtering: keep the smallest set of tokens whose probability
+    mass reaches ``p`` (the crossing token included), masked to -inf
+    elsewhere.  Implemented as a bisection for the largest probability
+    threshold t with mass{prob >= t} >= p — one psum per iteration, no
+    full-vocab materialization or global sort.
+    """
+    if p >= 1.0:
+        return local_logits
+    lg = local_logits.astype(jnp.float32)
+    m = lax.pmax(jnp.max(lg, axis=-1), tp_axis)               # (...,)
+    e = jnp.exp(lg - m[..., None])
+    z = lax.psum(jnp.sum(e, axis=-1), tp_axis)
+    prob = e / z[..., None]
+    pmax = lax.pmax(jnp.max(prob, axis=-1), tp_axis)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        mass = lax.psum(
+            jnp.sum(jnp.where(prob >= mid[..., None], prob, 0.0), axis=-1),
+            tp_axis)
+        ok = mass >= p                 # threshold still admissible -> raise
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    lo0 = jnp.zeros_like(pmax)
+    lo, _ = lax.fori_loop(0, iters, body, (lo0, pmax))
+    return jnp.where(prob >= lo[..., None], local_logits, NEG_INF)
+
+
+def filtered_logits(local_logits, *, vocab_size: int, tp_axis: str = "model",
+                    temperature: float = 1.0, top_k: int = 0,
+                    top_p: float = 1.0):
+    """Target-distribution logits: temperature scaling, then top-k, then
+    top-p, with the padded vocab tail masked throughout.  f32 output."""
+    lg = _mask_vocab_pad(local_logits, vocab_size=vocab_size, tp_axis=tp_axis)
+    if temperature > 0.0:
+        lg = lg / temperature
+    lg = apply_top_k(lg, top_k, tp_axis=tp_axis)
+    lg = apply_top_p(lg, top_p, tp_axis=tp_axis)
+    return lg
+
+
+def gumbel_argmax(local_logits, key, *, vocab_size: int,
+                  tp_axis: str = "model"):
+    """One Gumbel-max draw per row from (already filtered) local logits.
+    ``key`` must be identical on every shard; it is folded per shard so the
+    noise stays iid across the global vocab."""
+    shard_key = jax.random.fold_in(key, lax.axis_index(tp_axis))
+    g = jax.random.gumbel(shard_key, local_logits.shape, jnp.float32)
+    return sharded_argmax(local_logits.astype(jnp.float32) + g,
+                          vocab_size=vocab_size, tp_axis=tp_axis)
+
 
 def sample(local_logits, *, vocab_size: int, tp_axis: str = "model",
-           temperature: float = 0.0, key=None):
+           temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+           key=None):
     """local_logits: (B, 1, V_loc) -> token ids (B,).
 
     temperature == 0 -> greedy (deterministic tie-break). Stochastic sampling
-    uses the Gumbel-max trick so it composes with the sharded argmax without
-    materializing full logits on any shard.
+    applies temperature/top-k/top-p filtering and then the Gumbel-max trick,
+    so it composes with the sharded argmax without materializing full logits
+    on any shard.
     """
     if temperature <= 0.0:
         return sharded_argmax(local_logits, vocab_size=vocab_size,
                               tp_axis=tp_axis)[:, 0]
-    v_loc = local_logits.shape[-1]
-    lo = lax.axis_index(tp_axis) * v_loc
-    # per-shard fold of the key keeps gumbels iid across the global vocab
-    shard_key = jax.random.fold_in(key, lax.axis_index(tp_axis))
-    g = jax.random.gumbel(shard_key, local_logits.shape, jnp.float32)
-    perturbed = local_logits.astype(jnp.float32) / temperature + g
-    return sharded_argmax(perturbed, vocab_size=vocab_size,
-                          tp_axis=tp_axis)[:, 0]
+    lg = filtered_logits(local_logits, vocab_size=vocab_size, tp_axis=tp_axis,
+                         temperature=temperature, top_k=top_k, top_p=top_p)
+    return gumbel_argmax(lg, key, vocab_size=vocab_size,
+                         tp_axis=tp_axis)[:, 0]

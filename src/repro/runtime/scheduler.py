@@ -24,6 +24,11 @@ Paged mode (``SchedulerConfig.paged``) changes admission and accounting:
 * a running request can be preempted (DECODE -> WAITING, recompute): its
   blocks are freed and it re-enters the queue front with its generated
   tokens folded into the context (``Request.resumed``).
+
+Speculative decoding (``spec_gamma > 0``) charges the verify batch —
+gamma+1 tokens per decoding sequence — against ``chunk_tokens`` before
+sizing the prefill chunk, so the combined iteration token count stays
+bounded (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -44,6 +49,9 @@ class SchedulerConfig:
     block_size: int = 16            # tokens per KV block
     num_blocks: int = 0             # 0 -> max_batch * ceil(max_len/block)
     prefix_caching: bool = True
+    # --- speculative decoding (runtime/spec.py, DESIGN.md §8) ---
+    spec_gamma: int = 0             # draft tokens per verify step (0 = off)
+    spec_ngram: int = 3             # n-gram length of the default draft
 
     @property
     def max_blocks_per_req(self) -> int:
@@ -119,8 +127,16 @@ class Scheduler:
         prefilling = [r for r in self.active
                       if r is not None and r.state == State.PREFILL]
         prefill = None
-        if prefilling:
-            budget = self.cfg.chunk_tokens
+        budget = self.cfg.chunk_tokens
+        if self.cfg.spec_gamma and decode_slots:
+            # speculative verify rides the same iteration as the chunk and
+            # carries gamma+1 tokens per decoding sequence: charge them
+            # against the chunk budget so the combined iteration token
+            # count stays bounded (and the weave-threshold decision inside
+            # the model sees honestly-sized batches on both calls)
+            budget -= len(decode_slots) * (self.cfg.spec_gamma + 1)
+        if prefilling and budget >= min(self.cfg.prefill_bucket,
+                                        self.cfg.chunk_tokens):
             b = self.cfg.prefill_bucket
             # chunk length: bucketized max remaining MISS tokens, capped by
             # the budget (prefix-hit tokens are never re-charged)

@@ -1,0 +1,286 @@
+"""Speculative decoding: pluggable draft proposers + the device-side
+multi-token verification math (DESIGN.md §8).
+
+Plain decode carries one token per sequence per step — exactly the regime
+where TokenWeave's overlap never activates (`tokenweave_min_tokens`).
+Speculative decoding turns each decode iteration into a gamma+1-token
+verify batch per sequence: a cheap *draft* proposes gamma tokens, the
+target model scores the whole window in ONE forward (multi-token decode
+attention over the KV cache), and standard rejection sampling commits the
+longest correct prefix plus one corrected/bonus token.  Decode iterations
+now carry ``B * (gamma+1)`` tokens, pushing the latency-critical path over
+the weave threshold — "decode looks like small prefill".
+
+Correctness contract (leniency-free):
+
+* greedy (temperature == 0): a draft token is accepted iff it equals the
+  target argmax at its position, and the emitted correction/bonus IS the
+  target argmax — the committed stream is token-identical to plain greedy
+  decoding by construction.
+* stochastic: every draft token is treated as a *deterministic* proposal
+  (q = a point mass at the drafted token).  Accept with probability
+  p_target(d); on rejection sample from the renormalized leave-one-out
+  distribution p(x)/(1-p(d)), x != d.  For ANY draft process this yields
+  P(committed token = x) = p_target(x) exactly — the draft choice affects
+  only the acceptance rate, never the output distribution — so n-gram
+  drafts (no q available) and model drafts share one verification rule.
+
+Both verification rules run inside ``jax.shard_map`` on vocab-SHARDED
+logits: argmax/gather/residual-sampling compose pmax/psum/Gumbel-max
+(runtime/sampler.py) and never materialize the full vocabulary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.layers import embedding as E
+from repro.layers.embedding import sharded_argmax
+from repro.runtime.sampler import filtered_logits, gumbel_argmax
+
+# ==========================================================================
+# device side: rejection-sampling verification over vocab-sharded logits
+# ==========================================================================
+
+
+def _leading_accepts(accept) -> jnp.ndarray:
+    """(B, gamma) bool -> (B,) length of the leading all-True run."""
+    return jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+
+
+def verify_greedy(local_logits, draft, *, vocab_size: int,
+                  tp_axis: str = "model"):
+    """Greedy verification. local_logits: (B, gamma+1, V_loc) target logits
+    for the verify window; draft: (B, gamma) int32, -1 = no proposal.
+
+    Returns (n_acc (B,), emit (B,)): the number of accepted draft tokens
+    and the one extra committed token — the target argmax at the first
+    mismatch (correction) or at the window end (bonus).  Identical to what
+    plain greedy decode would emit, position for position.
+    """
+    gamma = draft.shape[1]
+    tgt = sharded_argmax(local_logits, vocab_size=vocab_size,
+                         tp_axis=tp_axis)                     # (B, gamma+1)
+    match = (draft == tgt[:, :gamma]) & (draft >= 0)
+    n_acc = _leading_accepts(match)
+    emit = jnp.take_along_axis(tgt, n_acc[:, None], axis=1)[:, 0]
+    return n_acc, emit
+
+
+def verify_sample(local_logits, draft, key, *, vocab_size: int,
+                  tp_axis: str = "model", temperature: float = 1.0,
+                  top_k: int = 0, top_p: float = 1.0):
+    """Stochastic rejection-sampling verification (deterministic-proposal
+    rule, see module docstring).  The target distribution is the
+    temperature/top-k/top-p-filtered softmax; ``key`` must be identical on
+    every shard (acceptance decisions are replicated; only the Gumbel noise
+    is shard-folded).  Returns (n_acc (B,), emit (B,))."""
+    b, s, v_loc = local_logits.shape
+    gamma = draft.shape[1]
+    lg = filtered_logits(local_logits, vocab_size=vocab_size,
+                         tp_axis=tp_axis, temperature=temperature,
+                         top_k=top_k, top_p=top_p)            # (B, S, V_loc)
+
+    # p_target(draft_i | window prefix): stable sharded softmax gather
+    m = lax.pmax(jnp.max(lg, axis=-1), tp_axis)               # (B, S)
+    z = lax.psum(jnp.sum(jnp.exp(lg - m[..., None]), axis=-1), tp_axis)
+    lo = lax.axis_index(tp_axis) * v_loc
+    d_loc = draft - lo                                        # (B, gamma)
+    in_range = (d_loc >= 0) & (d_loc < v_loc) & (draft >= 0)
+    picked = jnp.take_along_axis(
+        lg[:, :gamma], jnp.clip(d_loc, 0, v_loc - 1)[..., None],
+        axis=-1)[..., 0]
+    p_draft = lax.psum(
+        jnp.where(in_range,
+                  jnp.exp(picked - m[:, :gamma]) / z[:, :gamma], 0.0),
+        tp_axis)                                              # (B, gamma)
+
+    k_u, k_res, k_bonus = jax.random.split(key, 3)
+    u = jax.random.uniform(k_u, (b, gamma))                   # replicated
+    accept = (u < p_draft) & (draft >= 0)
+    n_acc = _leading_accepts(accept)
+
+    # residual samples: at each window position, the drafted token's mass is
+    # removed and the rest renormalized — Gumbel-max over the masked logits
+    col = lo + jnp.arange(v_loc)
+    drafted_here = (col[None, None, :] == draft[..., None]) & \
+        (draft >= 0)[..., None]
+    residual_lg = jnp.where(drafted_here, -jnp.inf, lg[:, :gamma])
+    res = gumbel_argmax(residual_lg, k_res, vocab_size=vocab_size,
+                        tp_axis=tp_axis)                      # (B, gamma)
+    bonus = gumbel_argmax(lg[:, gamma:], k_bonus, vocab_size=vocab_size,
+                          tp_axis=tp_axis)[:, 0]              # (B,)
+    cand = jnp.concatenate([res, bonus[:, None]], axis=1)     # (B, gamma+1)
+    emit = jnp.take_along_axis(cand, n_acc[:, None], axis=1)[:, 0]
+    return n_acc, emit
+
+
+def verify_tokens(local_logits, draft, key, *, vocab_size: int,
+                  tp_axis: str = "model", temperature: float = 0.0,
+                  top_k: int = 0, top_p: float = 1.0):
+    """Dispatch greedy vs stochastic verification (trace-time branch)."""
+    if temperature <= 0.0:
+        return verify_greedy(local_logits, draft, vocab_size=vocab_size,
+                             tp_axis=tp_axis)
+    return verify_sample(local_logits, draft, key, vocab_size=vocab_size,
+                         tp_axis=tp_axis, temperature=temperature,
+                         top_k=top_k, top_p=top_p)
+
+
+# ==========================================================================
+# host side: draft proposers
+# ==========================================================================
+
+
+class DraftProposer:
+    """Interface: ``propose(contexts)`` maps each request's full token
+    context (prompt + generated so far, INCLUDING the pending decode input)
+    to at most ``gamma`` proposed continuation tokens."""
+
+    gamma: int
+
+    def propose(self, contexts: Sequence[Sequence[int]]) -> List[List[int]]:
+        raise NotImplementedError
+
+
+class NgramDraft(DraftProposer):
+    """Prompt-lookup / n-gram drafting: match the context's trailing n-gram
+    against earlier context (most recent occurrence wins, longer n-grams
+    tried first) and propose the tokens that followed it.  Zero model cost;
+    acceptance comes from the repetitiveness real text actually has
+    (code, multi-turn chat, retrieved documents)."""
+
+    def __init__(self, gamma: int, n: int = 3, min_n: int = 1):
+        if gamma < 1:
+            raise ValueError(f"gamma must be >= 1, got {gamma}")
+        self.gamma = gamma
+        self.n = n
+        self.min_n = min_n
+
+    def _propose_one(self, ctx: Sequence[int]) -> List[int]:
+        ctx = list(ctx)
+        for n in range(min(self.n, len(ctx) - 1), self.min_n - 1, -1):
+            pat = ctx[-n:]
+            # most recent earlier occurrence; the range start excludes the
+            # trailing self-match, so the continuation is never empty
+            for i in range(len(ctx) - n - 1, -1, -1):
+                if ctx[i:i + n] == pat:
+                    return ctx[i + n:i + n + self.gamma]
+        return []
+
+    def propose(self, contexts):
+        return [self._propose_one(c) for c in contexts]
+
+
+class ModelDraft(DraftProposer):
+    """Small-draft-model proposer via ``models/build.ModelApi``: gamma
+    greedy rollout steps, each a full-context forward of the draft model.
+
+    Documented simplification: the draft keeps NO KV cache — every proposal
+    token re-runs the whole context (lengths bucketed to bound
+    recompilation).  That is O(gamma * ctx) per engine step, fine for the
+    tiny CPU models this repo serves and it keeps the draft stateless
+    (nothing to roll back on rejection); a production draft would run its
+    own paged decode loop.  Draft greediness never affects output
+    correctness — only the acceptance rate (see module docstring).
+    """
+
+    def __init__(self, api, mesh, params, gamma: int, *,
+                 len_bucket: int = 64, max_batch: int = 8):
+        if gamma < 1:
+            raise ValueError(f"gamma must be >= 1, got {gamma}")
+        self.api = api
+        self.mesh = mesh
+        self.params = params
+        self.gamma = gamma
+        self.len_bucket = len_bucket
+        self.max_batch = max_batch
+        self._jit_cache: Dict[Tuple[int, int], object] = {}
+
+    def _step_fn(self, b: int, s: int):
+        key = (b, s)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        from jax.sharding import PartitionSpec as P
+        api = self.api
+
+        def fn(params, tokens, positions, last_idx):
+            h, _, _ = api.mod.forward(params, tokens, cfg=api.cfg,
+                                      pcfg=api.pcfg, positions=positions,
+                                      return_kv=False)
+            h_last = jnp.take_along_axis(h, last_idx[:, None, None], axis=1)
+            lg = E.lm_head_logits(params["embedding"], h_last)
+            return sharded_argmax(lg, vocab_size=api.cfg.vocab_size,
+                                  tp_axis=api.pcfg.tp_axis)[:, 0]
+
+        sm = jax.shard_map(fn, mesh=self.mesh,
+                           in_specs=(api.specs(), P(), P(), P()),
+                           out_specs=P(), check_vma=False)
+        jfn = jax.jit(sm)
+        self._jit_cache[key] = jfn
+        return jfn
+
+    def propose(self, contexts):
+        ctxs = [list(c) for c in contexts]
+        props: List[List[int]] = [[] for _ in ctxs]
+        lb = self.len_bucket
+        # batch padded to a max_batch multiple: bounds recompilation while
+        # still serving engines whose decode batch exceeds the default
+        b = self.max_batch * (-(-max(len(ctxs), 1) // self.max_batch))
+        for _ in range(self.gamma):
+            lens = [len(c) + len(p) for c, p in zip(ctxs, props)]
+            s = max(lb, ((max(lens) + lb - 1) // lb) * lb)
+            tokens = np.zeros((b, s), np.int32)
+            positions = np.full((b, s), -1, np.int32)
+            last_idx = np.zeros(b, np.int32)
+            for i, (c, p) in enumerate(zip(ctxs, props)):
+                row = c + p
+                tokens[i, :len(row)] = row
+                positions[i, :len(row)] = np.arange(len(row))
+                last_idx[i] = len(row) - 1
+            fn = self._step_fn(b, s)
+            nxt = np.asarray(fn(self.params, jnp.asarray(tokens),
+                                jnp.asarray(positions),
+                                jnp.asarray(last_idx)))
+            for i in range(len(ctxs)):
+                props[i].append(int(nxt[i]))
+        return props
+
+
+def make_draft(kind: str, gamma: int, *, ngram: int = 3) -> DraftProposer:
+    """Engine-default draft factory (model drafts are built by the caller,
+    who owns the draft params)."""
+    if kind == "ngram":
+        return NgramDraft(gamma, n=ngram)
+    raise ValueError(f"unknown draft kind {kind!r} "
+                     "(pass a ModelDraft instance for model drafting)")
+
+
+# ==========================================================================
+# stats
+# ==========================================================================
+
+
+@dataclasses.dataclass
+class SpecStats:
+    verify_steps: int = 0        # engine iterations that ran a verify batch
+    draft_proposed: int = 0      # draft tokens scored by the target model
+    draft_accepted: int = 0      # draft tokens committed
+    emitted: int = 0             # all committed tokens (accepted + 1/req)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return (self.draft_accepted / self.draft_proposed
+                if self.draft_proposed else 0.0)
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Mean committed tokens per verified sequence per engine step
+        (plain decode == 1.0 by definition)."""
+        seqs = self.emitted - self.draft_accepted   # one bonus/correction each
+        return self.emitted / seqs if seqs else 0.0

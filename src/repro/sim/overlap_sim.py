@@ -15,6 +15,11 @@ Modes (match core.fused_collectives + the weave):
     fuseonly   serial: fused RS+norm+AG kernel (paper TokenWeave-fuseonly)
     tokenweave fused kernel + two-split overlap    (paper full TokenWeave)
     nocomm     collectives removed (paper vllm-nocomm counterfactual)
+
+Speculative decoding (``spec_decode_latency`` / ``spec_decode_summary``)
+re-models the decode step as a gamma+1-token verify batch per sequence, so
+the weave-vs-unsplit crossover on the latency-critical decode path is
+visible analytically (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -223,3 +228,53 @@ def layer_latency(cfg: ModelConfig, mode: str, tokens: int, *, tp: int = 8,
 def e2e_latency(cfg: ModelConfig, mode: str, tokens: int, **kw) -> float:
     per_layer = layer_latency(cfg, mode, tokens, **kw)
     return per_layer * cfg.num_layers
+
+
+# --------------------------------------------------------------------------
+# speculative decoding (runtime/spec.py, DESIGN.md §8): decode modeled as a
+# gamma+1-token verify batch per sequence
+# --------------------------------------------------------------------------
+
+def expected_tokens_per_step(gamma: int, alpha: float) -> float:
+    """E[committed tokens per sequence per verify step] when each draft
+    token is accepted independently with probability ``alpha``:
+    1 + a + ... + a^gamma (Leviathan et al., 2023)."""
+    return sum(alpha ** i for i in range(gamma + 1))
+
+
+def spec_decode_latency(cfg: ModelConfig, mode: str, batch: int, gamma: int,
+                        alpha: float, *, tp: int = 8, ctx: int = 8192,
+                        hw: Optional[HW] = None, n_layers: int = 4,
+                        smart: bool = True) -> float:
+    """Per-COMMITTED-token decode latency under speculative verification.
+
+    A plain decode iteration over ``batch`` sequences carries ``batch``
+    tokens (``gamma == 0`` reduces to exactly that); a verify iteration
+    carries ``batch * (gamma+1)`` tokens and commits
+    ``batch * E[tokens/step]`` of them.  Because the verify batch is what
+    the model actually sees, the TokenWeave split decision applies to it —
+    this is where the weave-vs-unsplit crossover on the latency-critical
+    decode path becomes visible: ``mode='tokenweave'`` only diverges from
+    ``'fuseonly'`` once ``batch*(gamma+1)`` clears the wave/threshold
+    floor, which plain decode (gamma = 0) essentially never does.
+    """
+    toks = batch * (gamma + 1)
+    step = e2e_latency(cfg, mode, toks, tp=tp, ctx=ctx, hw=hw,
+                       n_layers=n_layers, smart=smart)
+    return step / (batch * expected_tokens_per_step(gamma, alpha))
+
+
+def spec_decode_summary(cfg: ModelConfig, batch: int, gamma: int,
+                        alpha: float, *, tp: int = 8, ctx: int = 8192,
+                        hw: Optional[HW] = None) -> Dict[str, float]:
+    """Per-committed-token latencies for the spec-vs-plain / weave-vs-unsplit
+    grid the `serve/spec_decode` benchmark reports."""
+    out = {}
+    for mode in ("vanilla", "fuseonly", "tokenweave"):
+        out[f"plain/{mode}"] = spec_decode_latency(
+            cfg, mode, batch, 0, 0.0, tp=tp, ctx=ctx, hw=hw)
+        out[f"spec/{mode}"] = spec_decode_latency(
+            cfg, mode, batch, gamma, alpha, tp=tp, ctx=ctx, hw=hw)
+    out["tokens_per_step"] = expected_tokens_per_step(gamma, alpha)
+    out["verify_tokens"] = float(batch * (gamma + 1))
+    return out

@@ -10,8 +10,6 @@ params are all-gathered back to replicated — i.e. ZeRO-1 dataflow for free.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +28,8 @@ class AdamWConfig:
 
 
 def init_opt_state(params):
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from conftest import REPO, SRC
+from conftest import SRC
 from repro.checkpoint.manager import CheckpointManager
 
 

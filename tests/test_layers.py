@@ -1,7 +1,6 @@
 """Layer-level correctness: attention impls, MoE vs dense oracle, SSM
 chunking/decode consistency — all on a 1x1 mesh (same code path as the
 production mesh; collectives over size-1 axes are identities)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -108,7 +107,8 @@ def test_ssm_chunked_equals_decode(version, mesh11):
     x = jax.random.normal(jax.random.PRNGKey(4), (2, 24, 32))
 
     def run(chunk):
-        f = lambda: mod_fwd(p, x, cfg=cfg, chunk=chunk)[0]
+        def f():
+            return mod_fwd(p, x, cfg=cfg, chunk=chunk)[0]
         return jax.jit(jax.shard_map(f, mesh=mesh11, in_specs=(),
                                      out_specs=P(None), check_vma=False))()
 

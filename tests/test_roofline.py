@@ -2,7 +2,6 @@
 point of the call-graph walk) and collective wire-cost accounting."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.analysis.hlo import analyze_text
 
@@ -50,7 +49,6 @@ def test_nested_scan_multipliers():
 
 def test_collective_wire_costs():
     """Per-device ring wire bytes for RS/AG/AR over an 8-way axis."""
-    import os
     from conftest import run_distributed
     run_distributed("""
 import jax, jax.numpy as jnp

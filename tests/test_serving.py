@@ -2,7 +2,6 @@
 decode must reproduce full-context greedy generation token-for-token, for
 both dense (KV cache) and ssm (state cache) families, plus the gemma3-style
 sliding-window ring buffer."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +84,23 @@ def test_scheduler_chunked_prefill_budget():
     assert len(group) * chunk <= 64 or len(group) == 1
     # only max_batch requests admitted
     assert sum(r is not None for r in sched.active) == 2
+
+
+def test_trace_generators_reproducible():
+    """Satellite: generators take an explicit seed OR a Random instance —
+    same seed => identical trace; a shared instance threads its state."""
+    import random
+    a = sharegpt_like_trace(20, vocab=100, seed=5)
+    b = sharegpt_like_trace(20, vocab=100, seed=5)
+    assert [(r.prompt, r.max_new_tokens) for r in a] == \
+        [(r.prompt, r.max_new_tokens) for r in b]
+    c = fixed_trace(5, 10, 3, vocab=50, seed=random.Random(9))
+    d = fixed_trace(5, 10, 3, vocab=50, seed=random.Random(9))
+    assert [r.prompt for r in c] == [r.prompt for r in d]
+    rng = random.Random(9)
+    fixed_trace(5, 10, 3, vocab=50, seed=rng)
+    e = fixed_trace(5, 10, 3, vocab=50, seed=rng)   # state advanced
+    assert [r.prompt for r in e] != [r.prompt for r in c]
 
 
 def test_sharegpt_trace_statistics():

@@ -1,0 +1,346 @@
+"""Speculative decoding (runtime/spec.py, DESIGN.md §8).
+
+* greedy spec output is token-identical to plain greedy decoding on BOTH
+  KV backends (paged block pool and legacy slots), for n-gram and
+  model-self drafts;
+* the stochastic rejection rule emits tokens distributed exactly like the
+  (filtered) target distribution regardless of what the draft proposes;
+* KV rollback after partial acceptance leaves the block table / pool
+  refcounts / prefix cache consistent at every step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.build import build_model
+from repro.runtime import spec as SP
+from repro.runtime.engine import Engine
+from repro.runtime.requests import Request, repetitive_trace
+from repro.runtime.scheduler import SchedulerConfig
+
+
+def _prompts(vocab, sizes=(23, 57, 40), seed=0):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(0, vocab, size=n)) for n in sizes]
+
+
+def _run(api, mesh, params, prompts, *, paged, gamma, n_new=12, draft=None,
+         **scfg_kw):
+    eng = Engine(api, mesh, params,
+                 SchedulerConfig(max_batch=4, chunk_tokens=64, max_len=128,
+                                 prefill_bucket=16, paged=paged,
+                                 spec_gamma=gamma, **scfg_kw),
+                 draft=draft)
+    for i, p in enumerate(prompts):
+        eng.add_request(Request(rid=i, prompt=list(p), max_new_tokens=n_new))
+    done = eng.run()
+    return eng, {r.rid: r.output for r in done}
+
+
+# --------------------------------------------------------------------------
+# greedy token-identity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True], ids=["legacy", "paged"])
+def test_greedy_spec_token_identical_ngram(paged, mesh11, tiny_cfg,
+                                           tiny_pcfg):
+    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    prompts = _prompts(tiny_cfg.vocab_size)
+    _, ref = _run(api, mesh11, params, prompts, paged=paged, gamma=0)
+    eng, got = _run(api, mesh11, params, prompts, paged=paged, gamma=3)
+    assert got == ref, (got, ref)
+    assert eng.stats.spec.verify_steps > 0
+    assert eng.stats.spec.tokens_per_step >= 1.0
+
+
+def test_greedy_spec_token_identical_model_draft(mesh11, tiny_cfg,
+                                                 tiny_pcfg):
+    """Self-draft (target model drafts for itself): acceptance must be 1.0
+    and output still identical — the strongest identity check because every
+    window commits gamma+1 tokens through the rollback machinery."""
+    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    prompts = _prompts(tiny_cfg.vocab_size)
+    _, ref = _run(api, mesh11, params, prompts, paged=True, gamma=0)
+    draft = SP.ModelDraft(api, mesh11, params, gamma=3, max_batch=4)
+    eng, got = _run(api, mesh11, params, prompts, paged=True, gamma=3,
+                    draft=draft)
+    assert got == ref
+    assert eng.stats.spec.acceptance_rate == pytest.approx(1.0)
+    assert eng.stats.spec.tokens_per_step > 2.0
+
+
+def test_spec_respects_max_new_tokens(mesh11, tiny_cfg, tiny_pcfg):
+    """Drafting is capped so verify never overshoots max_new_tokens."""
+    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    draft = SP.ModelDraft(api, mesh11, params, gamma=4, max_batch=4)
+    eng, got = _run(api, mesh11, params, _prompts(tiny_cfg.vocab_size),
+                    paged=True, gamma=4, n_new=5, draft=draft)
+    assert all(len(o) == 5 for o in got.values())
+
+
+def test_spec_rejected_on_unsupported_configs(mesh11, tiny_cfg, tiny_pcfg):
+    import dataclasses
+    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    slide = dataclasses.replace(tiny_cfg, sliding_window=16)
+    api_s = build_model(slide, tiny_pcfg, tp=1)
+    with pytest.raises(ValueError, match="sliding-window"):
+        Engine(api_s, mesh11, params,
+               SchedulerConfig(max_batch=2, paged=False, spec_gamma=2))
+    # paged backend masks windows instead of ring-buffering: allowed
+    Engine(api_s, mesh11, api_s.init(jax.random.PRNGKey(0)),
+           SchedulerConfig(max_batch=2, max_len=64, paged=True,
+                           spec_gamma=2))
+
+
+# --------------------------------------------------------------------------
+# rejection-sampling distribution sanity
+# --------------------------------------------------------------------------
+
+def test_rejection_sampling_matches_target_distribution(mesh11):
+    """The first committed token of a verify window must be distributed as
+    softmax(logits[0]) EXACTLY, no matter what the draft proposes (the
+    deterministic-proposal rule is unbiased for any draft)."""
+    vocab, gamma = 16, 2
+    rng = np.random.RandomState(1)
+    logits = jnp.asarray(rng.randn(1, gamma + 1, vocab) * 1.5,
+                         jnp.float32)
+    draft = jnp.asarray([[3, 5]], jnp.int32)   # fixed, adversarially wrong
+
+    def fn(lg, dr, key):
+        return SP.verify_tokens(lg, dr, key, vocab_size=vocab,
+                                tp_axis="model", temperature=1.0)
+
+    sm = jax.jit(jax.shard_map(
+        fn, mesh=mesh11, in_specs=(P(), P(), P()), out_specs=(P(), P()),
+        check_vma=False))
+
+    n_draws = 4000
+    counts = np.zeros(vocab)
+    keys = jax.random.split(jax.random.PRNGKey(0), n_draws)
+    for i in range(n_draws):
+        n_acc, emit = sm(logits, draft, keys[i])
+        first = int(draft[0, 0]) if int(n_acc[0]) >= 1 else int(emit[0])
+        counts[first] += 1
+    emp = counts / n_draws
+    tgt = np.asarray(jax.nn.softmax(logits[0, 0]))
+    tv = 0.5 * np.abs(emp - tgt).sum()
+    assert tv < 0.05, (tv, emp, tgt)
+
+
+def test_greedy_verify_math():
+    """Pure accept/emit logic: mismatch at position j commits draft[:j] and
+    emits the target argmax at j; full match emits the bonus."""
+    vocab = 8
+    tgt_tokens = np.array([[2, 4, 6, 1]])
+    logits = np.full((1, 4, vocab), -5.0, np.float32)
+    for i, t in enumerate(tgt_tokens[0]):
+        logits[0, i, t] = 5.0
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def fn(lg, dr):
+        return SP.verify_greedy(lg, dr, vocab_size=vocab, tp_axis="model")
+
+    sm = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(P(), P()),
+                               out_specs=(P(), P()), check_vma=False))
+    cases = [
+        ([2, 4, 6], 3, 1),     # all accepted -> bonus
+        ([2, 4, 0], 2, 6),     # mismatch at 2 -> correction = argmax there
+        ([0, 4, 6], 0, 2),     # immediate mismatch
+        ([2, -1, -1], 1, 4),   # short draft: padding never accepts
+        ([-1, -1, -1], 0, 2),  # no draft: plain decode semantics
+    ]
+    for dr, want_n, want_emit in cases:
+        n, emit = sm(jnp.asarray(logits),
+                     jnp.asarray([dr], jnp.int32))
+        assert (int(n[0]), int(emit[0])) == (want_n, want_emit), \
+            (dr, int(n[0]), int(emit[0]))
+
+
+# --------------------------------------------------------------------------
+# KV rollback / pool consistency
+# --------------------------------------------------------------------------
+
+def _assert_pool_consistent(eng):
+    mgr = eng.block_mgr
+    alloc = mgr.alloc
+    refs = [0] * alloc.num_blocks
+    for table in mgr.tables.values():
+        for b in table:
+            refs[b] += 1
+    for b in range(alloc.num_blocks):
+        assert alloc.ref[b] == refs[b], (b, alloc.ref[b], refs[b])
+        in_free = b in alloc.free
+        in_cached = b in alloc.cached_free
+        assert not (in_free and in_cached), b
+        if refs[b]:
+            assert not in_free and not in_cached, b
+        else:
+            assert in_free or in_cached, f"block {b} leaked"
+    # every DECODE request's table covers exactly its committed context
+    from repro.runtime.requests import State
+    for r in eng.sched.active:
+        if r is not None and r.state == State.DECODE:
+            want = mgr.blocks_needed(r.length - 1)
+            assert len(mgr.tables[r.rid]) >= want, (r.rid, r.length)
+
+
+def test_paged_spec_rollback_consistency(mesh11, tiny_cfg, tiny_pcfg):
+    """Partial acceptance every step (ngram draft on low-entropy prompts)
+    with a tight pool: after every engine iteration the block table, the
+    refcounts, and the free/cached lists must agree; at the end all blocks
+    are released."""
+    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = Engine(api, mesh11, params,
+                 SchedulerConfig(max_batch=3, chunk_tokens=48, max_len=96,
+                                 prefill_bucket=16, paged=True, block_size=4,
+                                 spec_gamma=4))
+    for r in repetitive_trace(4, motif_len=6, repeats=4, output_len=10,
+                              vocab=tiny_cfg.vocab_size, seed=3):
+        eng.add_request(r)
+    steps = 0
+    while eng.step():
+        steps += 1
+        _assert_pool_consistent(eng)
+        assert steps < 500
+    assert not eng.block_mgr.tables
+    st = eng.stats.spec
+    assert st.draft_proposed > 0
+    # partial acceptance actually happened (not all-or-nothing)
+    assert 0 < st.draft_accepted < st.draft_proposed
+
+
+def test_paged_spec_with_prefix_cache_identical(mesh11, tiny_cfg, tiny_pcfg):
+    """Spec decoding composes with prefix caching: shared-prefix prompts,
+    outputs identical to the non-spec paged run, registered blocks
+    survive truncation."""
+    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    base = _prompts(tiny_cfg.vocab_size, sizes=(40,))[0]
+    # more requests than slots (max_batch=4): the late admissions hit the
+    # blocks the early ones registered
+    prompts = [base, base[:32] + [1, 2, 3], base, list(base), list(base)]
+    _, ref = _run(api, mesh11, params, prompts, paged=True, gamma=0,
+                  block_size=8)
+    eng, got = _run(api, mesh11, params, prompts, paged=True, gamma=3,
+                    block_size=8)
+    assert got == ref
+    assert eng.block_mgr.stats.hit_tokens > 0
+
+
+def test_spec_stats_accounting(mesh11, tiny_cfg, tiny_pcfg):
+    """All decoded tokens are accounted for: verify-committed tokens plus
+    plain-decode fallback steps (iterations where nothing was drafted);
+    acceptance/tokens-per-step are internally consistent."""
+    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    eng, got = _run(api, mesh11, params, _prompts(tiny_cfg.vocab_size),
+                    paged=True, gamma=3)
+    st = eng.stats.spec
+    assert eng.stats.decode_tokens >= st.emitted > 0
+    n_seq_steps = st.emitted - st.draft_accepted
+    assert st.tokens_per_step == pytest.approx(st.emitted / n_seq_steps)
+    # every decoded token arrived via prefill-sample, fallback decode, or
+    # verify commit
+    total_out = sum(len(o) for o in got.values())
+    assert total_out == eng.stats.decode_tokens + len(got)
+
+
+def test_stochastic_spec_engine_reproducible(mesh11, tiny_cfg, tiny_pcfg):
+    """temperature/top-k/top-p run end-to-end through prefill, fallback
+    decode, AND verify (one PRNG stream, seeded): same seed => identical
+    outputs, different seed => different."""
+    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    prompts = _prompts(tiny_cfg.vocab_size, sizes=(20, 33))
+
+    def run(seed):
+        eng = Engine(api, mesh11, params,
+                     SchedulerConfig(max_batch=2, chunk_tokens=48,
+                                     max_len=96, prefill_bucket=16,
+                                     paged=True, spec_gamma=2),
+                     temperature=0.8, top_k=20, top_p=0.95, seed=seed)
+        for i, p in enumerate(prompts):
+            eng.add_request(Request(rid=i, prompt=list(p),
+                                    max_new_tokens=6))
+        return {r.rid: r.output for r in eng.run()}
+
+    a, b, c = run(0), run(0), run(1)
+    assert a == b
+    assert a != c
+    assert all(len(o) == 6 for o in a.values())
+
+
+def test_verify_weave_split_matches_unsplit(mesh11, tiny_cfg):
+    """A verify batch large enough to cross the weave threshold (32 rows x
+    3 tokens >= tokenweave_min_tokens) must produce the same logits as the
+    unsplit forward — the batch-dim split slices the slot cache and the
+    multi-token rows consistently."""
+    import dataclasses
+
+    from repro.configs.base import ParallelConfig
+    from repro.models import transformer as T
+
+    b, s_v, max_len = 32, 3, 16
+    pcfg_on = ParallelConfig(tokenweave=True, comm_mode="fused", remat=False,
+                             split_unit=16, tokenweave_min_tokens=32)
+    pcfg_off = dataclasses.replace(pcfg_on, tokenweave=False)
+    api = build_model(tiny_cfg, pcfg_on, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    cache = api.init_cache(b, max_len)
+    rng = np.random.RandomState(0)
+    tokens = jnp.asarray(rng.randint(0, tiny_cfg.vocab_size, (b, s_v)),
+                         jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(s_v, dtype=jnp.int32)[None],
+                                 (b, s_v))
+
+    outs = {}
+    for name, pcfg in (("weave", pcfg_on), ("unsplit", pcfg_off)):
+        def fn(p, c, t, pos, pcfg=pcfg):
+            return T.verify_step(p, t, c, cfg=tiny_cfg, pcfg=pcfg,
+                                 positions=pos)
+        sm = jax.jit(jax.shard_map(
+            fn, mesh=mesh11,
+            in_specs=(api.specs(), api.cache_specs(), P(), P()),
+            out_specs=(P(), api.cache_specs()), check_vma=False))
+        logits, new_cache = sm(params, cache, tokens, positions)
+        outs[name] = (np.asarray(logits), np.asarray(new_cache["k"]))
+    np.testing.assert_allclose(outs["weave"][0], outs["unsplit"][0],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(outs["weave"][1], outs["unsplit"][1],
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# scheduler accounting
+# --------------------------------------------------------------------------
+
+def test_scheduler_charges_verify_tokens():
+    from repro.runtime.requests import State, fixed_trace
+    from repro.runtime.scheduler import Scheduler
+    scfg = SchedulerConfig(max_batch=4, chunk_tokens=64, max_len=512,
+                           prefill_bucket=16, spec_gamma=7)
+    sched = Scheduler(scfg)
+    # two decoding requests occupy 2*(7+1)=16 tokens of the 64 budget
+    for r in fixed_trace(2, input_len=8, output_len=4, vocab=50):
+        sched.add(r)
+    sched.next_step()
+    for r in sched.active:
+        if r is not None:
+            r.state = State.DECODE
+            r.prefill_pos = len(r.prompt)
+            r.output.append(1)
+    big = fixed_trace(1, input_len=100, output_len=4, vocab=50)[0]
+    big.rid = 99
+    sched.add(big)
+    step = sched.next_step()
+    assert step is not None and step.prefill is not None
+    group, chunk = step.prefill
+    assert len(group) * chunk <= 64 - 2 * 8, (chunk, len(group))
