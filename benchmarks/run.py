@@ -7,16 +7,31 @@ micro-benchmarks where a kernel can be timed for real (interpret mode /
 pure-jnp ops). Prints ``name,us_per_call,derived`` CSV rows; derived
 carries the figure-level ratio the paper reports.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+``--json PATH`` additionally writes the DETERMINISTIC serving metrics
+(weave-activation rate, tokens/forward, prefix hit rate, spec acceptance
+— counters, never wall clock) for the CI regression gate
+(`scripts/check_bench.py` vs `benchmarks/baseline.json`).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only a,b] \
+        [--strict] [--json BENCH_serve.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
+
+# deterministic metrics collected during the run for --json (the CI
+# regression gate compares them against benchmarks/baseline.json)
+_METRICS: dict = {}
+
+
+def _metric(name, value):
+    _METRICS[name] = round(float(value), 6)
 
 
 def _row(name, us, derived=""):
@@ -207,6 +222,10 @@ def serve_prefix_cache(quick=False):
          f"prefill_saved={cold_prefill - eng.stats.prefill_tokens} "
          f"preemptions={st.preemptions} evictions={st.evictions} "
          f"outputs_identical=True")
+    _metric("serve/prefix_cache/hit_rate", st.hit_rate)
+    _metric("serve/prefix_cache/prefill_saved",
+            cold_prefill - eng.stats.prefill_tokens)
+    _metric("serve/prefix_cache/preemptions", st.preemptions)
 
 
 def serve_spec_decode(quick=False):
@@ -275,6 +294,9 @@ def serve_spec_decode(quick=False):
              f"tokens_per_step={st.tokens_per_step:.2f} "
              f"speedup_steps={steps0 / max(steps, 1):.2f}x "
              f"speedup_wall={dt0 / dt:.2f}x outputs_identical=True")
+        _metric(f"serve/spec_decode/{name}/accept_rate", st.acceptance_rate)
+        _metric(f"serve/spec_decode/{name}/tokens_per_step",
+                st.tokens_per_step)
 
     # analytic (sim spec mode): sub-wave decode batches commit E[tokens]
     # per step almost for free; large verify batches cross the weave
@@ -292,6 +314,90 @@ def serve_spec_decode(quick=False):
          f"{s256['spec/fuseonly']/s256['spec/tokenweave']:.3f}x "
          f"verify_tokens={s256['verify_tokens']:.0f} "
          f"tokens_per_step={s256['tokens_per_step']:.2f}")
+
+
+def serve_packed(quick=False):
+    """Packed hybrid batching (DESIGN.md §6, CPU-real): the same mixed
+    prefill+decode trace through the two-dispatch engine and the packed
+    engine — outputs pinned token-identical; reports weave-activation rate
+    and tokens/forward for both (packed must weave strictly more often:
+    mixed iterations whose decode and prefill halves are each below
+    ``tokenweave_min_tokens`` jointly cross it), plus the sim's analytic
+    packed crossover row."""
+    from repro.configs.base import ModelConfig, ParallelConfig
+    from repro.models.build import build_model
+    from repro.runtime.engine import Engine
+    from repro.runtime.requests import repetitive_trace
+    from repro.runtime.scheduler import SchedulerConfig
+
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=128, dtype="float32")
+    # genuine-crossover sizing (REAL tokens, not shape padding): four γ=3
+    # verify windows carry 16 real tokens and the ragged prefill take adds
+    # up to 16 more, so mixed packed iterations hit exactly the 32-token
+    # threshold (asserted via max_forward_tokens below); the two-dispatch
+    # engine judges the same halves apart — verify (4, 4) is far under the
+    # row floor and its prefill chunk is capped at 32-16=16 tokens — and
+    # only weaves on the rare pure-prefill iteration
+    pcfg = ParallelConfig(tokenweave=True, comm_mode="fused", remat=False,
+                          split_unit=16, tokenweave_min_tokens=32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    api = build_model(cfg, pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    n_req = 6 if quick else 10
+
+    def run(packed):
+        eng = Engine(api, mesh, params,
+                     SchedulerConfig(max_batch=4, chunk_tokens=32,
+                                     max_len=256, prefill_bucket=16,
+                                     paged=True, spec_gamma=3,
+                                     packed=packed))
+        for r in repetitive_trace(n_req, motif_len=12, repeats=3,
+                                  output_len=10, vocab=cfg.vocab_size,
+                                  seed=7):
+            eng.add_request(r)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        return eng, {r.rid: r.output for r in done}, dt
+
+    two, ref, _ = run(False)
+    pk, got, dt = run(True)
+    assert got == ref, "packed batching changed outputs!"
+    assert pk.stats.weave_rate > two.stats.weave_rate, (
+        f"packed weave rate {pk.stats.weave_rate:.2f} not above "
+        f"two-dispatch {two.stats.weave_rate:.2f}")
+    assert pk.stats.max_forward_tokens >= pcfg.tokenweave_min_tokens, (
+        "packed crossover must be carried by real tokens, not padding")
+    _row("serve/packed", dt * 1e6 / max(pk.stats.steps, 1),
+         f"weave_rate={pk.stats.weave_rate:.2f} "
+         f"weave_rate_two_dispatch={two.stats.weave_rate:.2f} "
+         f"tokens_per_forward={pk.stats.tokens_per_forward:.1f} "
+         f"vs_two_dispatch={two.stats.tokens_per_forward:.1f} "
+         f"forwards={pk.stats.forwards} vs {two.stats.forwards} "
+         f"max_real_tokens={pk.stats.max_forward_tokens} "
+         f"outputs_identical=True")
+    _metric("serve/packed/weave_rate", pk.stats.weave_rate)
+    _metric("serve/packed/weave_rate_two_dispatch", two.stats.weave_rate)
+    _metric("serve/packed/tokens_per_forward", pk.stats.tokens_per_forward)
+    _metric("serve/packed/tokens_per_forward_two_dispatch",
+            two.stats.tokens_per_forward)
+    _metric("serve/packed/max_forward_tokens", pk.stats.max_forward_tokens)
+
+    # analytic (sim packed mode): the crossover cell — decode batch and
+    # prefill chunk each under the wave/threshold floor (no split), the
+    # packed iteration over it (splits, overlaps)
+    from repro.configs import get_config
+    from repro.sim.overlap_sim import packed_summary
+    big = get_config("llama3.3-70b")
+    s = packed_summary(big, decode_tokens=256, chunk_tokens=384, tp=16)
+    _row("serve/packed/sim_d256_c384", s["packed/tokenweave"] * 1e6,
+         f"packed_gain={s['packed/fuseonly']/s['packed/tokenweave']:.3f}x "
+         f"two_dispatch_gain={s['two/fuseonly']/s['two/tokenweave']:.3f}x "
+         f"halves_weave={s['halves_weave']:.0f} "
+         f"packed_weaves={s['packed_weaves']:.0f}")
 
 
 def fig14_overlap_comparison(quick=False):
@@ -360,25 +466,51 @@ def kernels_micro(quick=False):
 
 FIGS = [fig1_comm_overhead, fig4_fused_kernel, fig9_smart_split,
         fig11_latency, fig12_throughput, fig12_engine_cpu,
-        serve_prefix_cache, serve_spec_decode, fig14_overlap_comparison,
-        fig16_ablation, kernels_micro]
+        serve_prefix_cache, serve_spec_decode, serve_packed,
+        fig14_overlap_comparison, fig16_ablation, kernels_micro]
+
+
+def _select_figs(only: str | None):
+    """Resolve ``--only`` (comma-separated section names, substring match
+    per entry) to a figure list.  An entry matching NOTHING is an error —
+    a typo'd filter used to silently run zero figures, which would make
+    the CI gate vacuously green."""
+    if not only:
+        return list(FIGS)
+    valid = [f.__name__ for f in FIGS]
+    selected, seen = [], set()
+    for entry in only.split(","):
+        entry = entry.strip()
+        matches = [f for f in FIGS if entry and entry in f.__name__]
+        if not matches:
+            raise SystemExit(
+                f"--only entry {entry!r} matches no benchmark section; "
+                f"valid names: {', '.join(valid)}")
+        for f in matches:
+            if f.__name__ not in seen:
+                seen.add(f.__name__)
+                selected.append(f)
+    return selected
 
 
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true")
-    p.add_argument("--only", default=None)
+    p.add_argument("--only", default=None,
+                   help="comma-separated section names (substring match); "
+                        "unknown names error with the valid choices")
     p.add_argument("--strict", action="store_true",
                    help="exit non-zero if any figure errors (CI gate; the "
                         "default keeps the full local sweep robust)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="write the deterministic serving metrics as JSON "
+                        "(compared against benchmarks/baseline.json by "
+                        "scripts/check_bench.py)")
     args = p.parse_args()
+    figs = _select_figs(args.only)
     print("name,us_per_call,derived")
     errors = 0
-    ran = 0
-    for fig in FIGS:
-        if args.only and args.only not in fig.__name__:
-            continue
-        ran += 1
+    for fig in figs:
         try:
             fig(quick=args.quick)
         except Exception as e:  # keep the harness robust
@@ -386,10 +518,12 @@ def main() -> None:
             _row(f"{fig.__name__}/ERROR", 0.0, f"{type(e).__name__}: {e}")
             import traceback
             traceback.print_exc(file=sys.stderr)
-    if args.only and not ran:
-        print(f"no figures match --only {args.only!r}", file=sys.stderr)
-        if args.strict:
-            sys.exit(1)   # a typo'd filter must not pass the CI gate
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(_METRICS, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(_METRICS)} metrics to {args.json}",
+              file=sys.stderr)
     if args.strict and errors:
         sys.exit(1)
 

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate (CI `bench` job).
+
+Compares the deterministic serving metrics a benchmark run wrote with
+``python -m benchmarks.run --json BENCH_serve.json`` against the committed
+``benchmarks/baseline.json`` within a relative tolerance (default ±15%).
+Every baseline key must be present and in range; a zero baseline must stay
+zero (these are counters — preemptions appearing out of nowhere IS a
+regression).  Metrics present in the current run but absent from the
+baseline are reported as a reminder to extend the baseline, not a failure
+— new coverage must never be punished.
+
+    python scripts/check_bench.py BENCH_serve.json \
+        [--baseline benchmarks/baseline.json] [--tol 0.15]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(cur: dict, base: dict, tol: float) -> list[str]:
+    failures = []
+    for key in sorted(base):
+        b = float(base[key])
+        if key not in cur:
+            failures.append(f"{key}: missing from current run "
+                            f"(baseline {b:g})")
+            continue
+        c = float(cur[key])
+        if b == 0.0:
+            ok = c == 0.0
+            detail = f"current={c:g} baseline=0"
+        else:
+            rel = abs(c - b) / abs(b)
+            ok = rel <= tol
+            detail = f"current={c:g} baseline={b:g} rel_diff={rel:.1%}"
+        print(f"{'ok  ' if ok else 'FAIL'}  {key}: {detail}")
+        if not ok:
+            failures.append(f"{key}: {detail}")
+    return failures
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("current", help="metrics JSON from benchmarks.run --json")
+    p.add_argument("--baseline", default="benchmarks/baseline.json")
+    p.add_argument("--tol", type=float, default=0.15,
+                   help="relative tolerance (default 0.15 = ±15%%)")
+    args = p.parse_args()
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures = compare(cur, base, args.tol)
+    extra = sorted(set(cur) - set(base))
+    for key in extra:
+        print(f"note  {key}: not in baseline (current={cur[key]:g}) — "
+              f"extend {args.baseline} to start tracking it")
+    if failures:
+        print(f"\n{len(failures)} metric(s) out of tolerance:",
+              file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nall {len(base)} baseline metrics within ±{args.tol:.0%}")
+
+
+if __name__ == "__main__":
+    main()

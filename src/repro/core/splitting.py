@@ -70,5 +70,28 @@ def split_sizes_for_batch(
     return smart_split(n_tokens, eff_unit)
 
 
+def packed_split(
+    n_tokens: int,
+    *,
+    unit: int,
+    min_tokens: int,
+) -> Optional[Tuple[int, int]]:
+    """Weave decision for a packed hybrid iteration (DESIGN.md §6).
+
+    A packed plan concatenates prefill-chunk segments, single-token decode
+    slots, and speculative verify windows along ONE flat token axis, so the
+    split point needs no rectangularity constraint (``row_multiple == 1``)
+    and — crucially — the decision sees the TRUE combined iteration size.
+    Under the two-dispatch scheme each half is judged against
+    ``min_tokens`` alone; mixed iterations that would jointly cross the
+    threshold fall back to the unsplit path on both calls.  Segment
+    boundaries need not align with the split: a segment straddling the cut
+    attends the prefix split's freshly written KV (the §3.1 chunked
+    attention dependency).
+    """
+    return split_sizes_for_batch(n_tokens, unit=unit, min_tokens=min_tokens,
+                                 row_multiple=1)
+
+
 def pad_to_multiple(n: int, multiple: int) -> int:
     return ((n + multiple - 1) // multiple) * multiple

@@ -475,6 +475,105 @@ def attn_verify_paged(params, x, pool_layer, block_tables, *, positions, cfg,
     return partial, {"k": k_c, "v": v_c, "pos": p_c}
 
 
+def attn_packed(params, x, cache, *, positions, seg_slots, cfg,
+                lay: AttnLayout, theta, window: int = 0):
+    """Packed mixed-segment step against the slot KV cache (DESIGN.md §6).
+
+    x: (1, T, d) — prefill-chunk segments, single-token decode slots, and
+    speculative verify windows concatenated along one token axis.
+    seg_slots: (T,) int32 cache row owning each token (-1 = padding);
+    positions: (1, T) absolute query positions (-1 = padding).
+
+    All T tokens scatter into their owning rows FIRST (the same
+    scatter-then-attend discipline as ``attn_verify``), then every token
+    attends its own row's full cache view with the causal mask ordering
+    queries against both pre-existing context and same-step keys — so a
+    segment's later tokens see its earlier ones, and tokens never see
+    other segments (different rows).  The epilogue is shared verbatim with
+    ``attn_decode``/``attn_verify`` via ``_decode_attn_math``.
+
+    Full-attention layers only on this backend: a packed chunk's scatter
+    into a sliding-window ring buffer (C == window) could evict a key an
+    earlier query in the same step still needs — the engine rejects
+    packed mode on windowed legacy models (the paged backend stores
+    full-length KV and masks, so it is unaffected).
+
+    Cost note: the per-token row gather materializes (T, C, kvh, dh) —
+    tokens of the same segment repeat their request's KV read, a
+    T-vs-B amplification over the rectangular paths.  It is the same
+    order as the (T, heads, C) score tensor this pure-jnp emulation
+    already materializes, so asymptotics are unchanged on the CPU
+    target; the TPU production form is a varlen flash kernel that
+    streams each segment's KV once (vLLM-style), which this function is
+    the reference semantics for.
+    """
+    _, t, _ = x.shape
+    q, k_new, v_new = _project_qkv(params, x, cfg, lay, positions=positions,
+                                   theta=theta)
+    bslots, c = cache["pos"].shape
+    pos = positions[0]                                        # (T,)
+    row = jnp.where((seg_slots >= 0) & (pos >= 0), seg_slots,
+                    bslots)                                   # OOB -> dropped
+    slot = jnp.where(pos >= 0, pos % c, 0)
+    k_c = cache["k"].at[row, slot].set(k_new[0], mode="drop")
+    v_c = cache["v"].at[row, slot].set(v_new[0], mode="drop")
+    p_c = cache["pos"].at[row, slot].set(pos.astype(jnp.int32), mode="drop")
+
+    # per-token gather of the owning row: (T, C, kvh, dh); padding tokens
+    # read row 0 but their qpos == -1 masks every key
+    rsafe = jnp.clip(seg_slots, 0, bslots - 1)
+    kg = k_c[rsafe]
+    vg = v_c[rsafe]
+    pg = p_c[rsafe]
+    partial = _decode_attn_math(params, q[0][:, None], kg, vg, pg,
+                                pos[:, None], x_dtype=x.dtype, cfg=cfg,
+                                lay=lay, window=window)       # (T, 1, d)
+    return jnp.swapaxes(partial, 0, 1), {"k": k_c, "v": v_c, "pos": p_c}
+
+
+def attn_packed_paged(params, x, pool_layer, block_tables, *, positions,
+                      seg_slots, cfg, lay: AttnLayout, theta,
+                      window: int = 0):
+    """Packed mixed-segment step against the paged block pool: each token
+    scatters through its owning request's block table (the engine has
+    already allocated/grown/COW'd every block the plan touches), then
+    attends the gathered rectangular view of that table.  Unlike paged
+    decode, packed steps CAN weave: splits consume the pool sequentially
+    (suffix split reads the prefix split's writes) instead of forking it
+    across a batch split.  Same single-host restriction as every paged
+    path (DESIGN.md §7), and the same per-token gather amplification /
+    varlen-kernel production note as ``attn_packed``.
+    """
+    _, t, _ = x.shape
+    q, k_new, v_new = _project_qkv(params, x, cfg, lay, positions=positions,
+                                   theta=theta)
+    nb, bs = pool_layer["pos"].shape
+    pos = positions[0]                                        # (T,)
+    rsafe = jnp.clip(seg_slots, 0, block_tables.shape[0] - 1)
+    bt_tok = block_tables[rsafe]                              # (T, nblk)
+    blk = jnp.where(pos >= 0, pos // bs, 0)
+    phys = jnp.take_along_axis(bt_tok, blk[:, None], axis=1)[:, 0]
+    valid = (pos >= 0) & (seg_slots >= 0) & (phys >= 0)
+    phys = jnp.where(valid, phys, nb)                         # OOB -> dropped
+    off = jnp.where(pos >= 0, pos % bs, 0)
+    k_c = pool_layer["k"].at[phys, off].set(k_new[0], mode="drop")
+    v_c = pool_layer["v"].at[phys, off].set(v_new[0], mode="drop")
+    p_c = pool_layer["pos"].at[phys, off].set(pos.astype(jnp.int32),
+                                              mode="drop")
+
+    bt = jnp.maximum(bt_tok, 0)
+    nblk = bt.shape[1]
+    kvh = k_c.shape[2]
+    kg = k_c[bt].reshape(t, nblk * bs, kvh, cfg.head_dim)
+    vg = v_c[bt].reshape(t, nblk * bs, kvh, cfg.head_dim)
+    pg = jnp.where(bt_tok[:, :, None] >= 0, p_c[bt], -1)
+    pg = pg.reshape(t, nblk * bs)
+    partial = _decode_attn_math(params, q[0][:, None], kg, vg, pg,
+                                pos[:, None], x_dtype=x.dtype, cfg=cfg,
+                                lay=lay, window=window)       # (T, 1, d)
+    return jnp.swapaxes(partial, 0, 1), {"k": k_c, "v": v_c, "pos": p_c}
+
+
 def attn_cross(params, x, enc_kv, *, cfg, lay: AttnLayout):
     """Whisper-style cross attention: q from decoder x, kv precomputed from
     the encoder output (enc_kv = (k, v, kpos))."""

@@ -73,6 +73,12 @@ class ModelApi:
         return self.mod.verify_step(params, tokens, cache, cfg=self.cfg,
                                     pcfg=self.pcfg, positions=positions, **kw)
 
+    def packed_step(self, params, tokens, cache, positions, **kw):
+        """Packed mixed-segment hybrid step (transformer families only,
+        DESIGN.md §6)."""
+        return self.mod.packed_step(params, tokens, cache, cfg=self.cfg,
+                                    pcfg=self.pcfg, positions=positions, **kw)
+
 
 def build_model(cfg: ModelConfig, pcfg: ParallelConfig, tp: int,
                 ep: int = 1) -> ModelApi:

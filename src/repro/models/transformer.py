@@ -39,7 +39,7 @@ from jax import lax
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import fused_collectives as fc
-from repro.core.splitting import split_sizes_for_batch
+from repro.core.splitting import packed_split, split_sizes_for_batch
 from repro.distributed.context import CommCtx
 from repro.layers import attention as A
 from repro.layers import embedding as E
@@ -157,13 +157,27 @@ def param_specs(cfg: ModelConfig, pcfg: ParallelConfig):
 
 def _layer_split(lp, h, res, *, positions, mrope_positions, kind: LayerKind,
                  cfg, pcfg, ctx: CommCtx, lay, kv_prefix, cache_layer,
-                 decode: bool, block_tables=None):
+                 decode: bool, block_tables=None, packed_slots=None):
     """One transformer layer on one token-split.
 
     Returns (h_next, res, new_kv or new_cache_layer, aux).
     """
     aux = jnp.zeros((), jnp.float32)
-    if decode and block_tables is not None:
+    if packed_slots is not None:
+        # packed mixed-segment step (DESIGN.md §6): cache_layer is the FULL
+        # slot cache (or one layer of the paged pool when block_tables is
+        # given); every token scatters into its owning row, then attends it
+        if block_tables is not None:
+            a_part, kv_out = A.attn_packed_paged(
+                lp["attn"], h, cache_layer, block_tables,
+                positions=positions, seg_slots=packed_slots, cfg=cfg,
+                lay=lay, theta=kind.theta, window=kind.window)
+        else:
+            a_part, kv_out = A.attn_packed(
+                lp["attn"], h, cache_layer, positions=positions,
+                seg_slots=packed_slots, cfg=cfg, lay=lay, theta=kind.theta,
+                window=kind.window)
+    elif decode and block_tables is not None:
         # paged decode: cache_layer is one layer of the shared block pool;
         # the block-table indirection replaces per-slot rows (no seq_axis —
         # the shared pool cannot shard over data, DESIGN.md §7).  S > 1 is
@@ -228,6 +242,25 @@ def _weave_layer(lp, state, cache_layer, *, kind, cfg, pcfg, ctx, lay,
     kv_outs, auxes = [], []
     new_h, new_res = list(state["h"]), list(state["res"])
 
+    if state.get("pslots") is not None:
+        # packed mixed-segment step: the splits run over the SAME cache in
+        # sequence — the suffix split's attention reads the prefix split's
+        # freshly scattered KV (a straddling segment's later tokens need
+        # its earlier ones), the same §3.1 chunked-attention dependency the
+        # prefill weave already carries, so the Fig.8 overlap is preserved.
+        cl = cache_layer
+        for i in range(n):
+            h, res, cl, aux = _layer_split(
+                lp, state["h"][i], state["res"][i],
+                positions=state["positions"][i],
+                mrope_positions=state["mrope"][i], kind=kind, cfg=cfg,
+                pcfg=pcfg, ctx=ctx, lay=lay, kv_prefix=None, cache_layer=cl,
+                decode=False, block_tables=block_tables,
+                packed_slots=state["pslots"][i])
+            new_h[i], new_res[i] = h, res
+            auxes.append(aux)
+        return dict(state, h=new_h, res=new_res), cl, sum(auxes)
+
     if decode and block_tables is not None:
         # paged decode runs unsplit (forward forces split=None): a batch
         # split would fork the shared block pool into two divergent copies
@@ -291,15 +324,21 @@ def _cache_prefix(cache_layer):
 # --------------------------------------------------------------------------
 
 def _decide_split(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
-                  decode: bool) -> Optional[Tuple[int, int]]:
+                  decode: bool, packed: bool = False
+                  ) -> Optional[Tuple[int, int]]:
     """Static (trace-time) TokenWeave split decision.
 
     prefill/train: split along the sequence dim (all rows cut at the same
-    position — rectangular shapes); decode: split along the batch dim.
+    position — rectangular shapes); decode: split along the batch dim;
+    packed: split along the flat packed token axis (b == 1), so the
+    threshold sees the true combined iteration size (DESIGN.md §6).
     Returns per-dim split sizes or None.
     """
     if not pcfg.tokenweave:
         return None
+    if packed:
+        return packed_split(b * s, unit=pcfg.split_unit_for(tp),
+                            min_tokens=pcfg.tokenweave_min_tokens)
     if decode:
         unit = max(tp, 8)
         if s > 1:
@@ -319,6 +358,21 @@ def _decide_split(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
     if split_tokens is None:
         return None
     return split_tokens[0] // b, split_tokens[1] // b  # seq-dim split
+
+
+def weave_decision(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
+                   decode: bool = False, packed: bool = False,
+                   paged_pool: bool = False) -> bool:
+    """Host-side mirror of the trace-time weave split decision (pure int
+    math — the engine uses it to report weave-activation rates without
+    re-tracing).  ``paged_pool`` marks a non-packed paged decode/verify
+    dispatch, which always runs unsplit (a batch split would fork the
+    shared pool, DESIGN.md §7); packed paged steps thread the pool
+    sequentially through the splits and CAN weave."""
+    if paged_pool and not packed:
+        return False
+    return _decide_split(b, s, tp=tp, pcfg=pcfg, decode=decode,
+                         packed=packed) is not None
 
 
 def _comm_ctx(pcfg: ParallelConfig, cfg: ModelConfig, t_local: int,
@@ -345,7 +399,7 @@ def _entry_norm(emb, w_first, ctx):
 def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
             positions=None, mrope_positions=None, extra_embeds=None,
             cache=None, decode: bool = False, return_kv: bool = True,
-            block_tables=None):
+            block_tables=None, packed_slots=None):
     """Shared forward. Returns (hidden_normed (B,S,d), kv_or_cache, aux).
 
     train: cache=None, decode=False (kv output suppressed via return_kv).
@@ -357,6 +411,12 @@ def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
     block_tables: (B, max_blocks) int32 — switches decode to the paged
         block-pool cache layout (runtime/paging.py); prefill is unaffected
         (the engine pre-gathers the paged prefix into rectangular rows).
+    packed_slots: (T,) int32 — switches to the packed mixed-segment mode
+        (DESIGN.md §6): tokens is (1, T) with per-token cache-row /
+        block-table-row owners (-1 = padding); cache is the FULL slot
+        cache (or the paged pool with block_tables) and the updated cache
+        is returned.  The weave split runs over the flat packed token
+        axis, so the threshold sees the true combined iteration size.
     """
     tp = lax.axis_size(pcfg.tp_axis)
     b = tokens.shape[0]
@@ -377,10 +437,19 @@ def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
     d = cfg.d_model
     w_first = params["norm_first"][0]
 
-    split = _decide_split(b, s_total, tp=tp, pcfg=pcfg, decode=decode)
-    if decode and block_tables is not None:
+    packed = packed_slots is not None
+    split = _decide_split(b, s_total, tp=tp, pcfg=pcfg, decode=decode,
+                          packed=packed)
+    if decode and block_tables is not None and not packed:
         split = None  # shared pool cannot be forked across a batch split
-    if split is not None and not decode:
+    pslots = None
+    if split is not None and packed:
+        s1, _ = split          # cut along the flat packed token axis
+        embs = [emb[:, :s1], emb[:, s1:]]
+        poss = [positions[:, :s1], positions[:, s1:]]
+        pslots = [packed_slots[:s1], packed_slots[s1:]]
+        mrs = [None, None]
+    elif split is not None and not decode:
         s1, _ = split
         embs = [emb[:, :s1], emb[:, s1:]]
         poss = [positions[:, :s1], positions[:, s1:]]
@@ -392,13 +461,16 @@ def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
         mrs = _split_mrope_batch(mrope_positions, b1)
     else:
         embs, poss, mrs = [emb], [positions], [mrope_positions]
+        if packed:
+            pslots = [packed_slots]
 
     hs, ress = [], []
     for e in embs:
         h_i, r_i = _entry_norm(e, w_first, ctx)
         hs.append(h_i)
         ress.append(r_i)
-    state = {"h": hs, "res": ress, "positions": poss, "mrope": mrs}
+    state = {"h": hs, "res": ress, "positions": poss, "mrope": mrs,
+             "pslots": pslots}
 
     kinds = layer_kinds(cfg)
     lay = A.attention_layout(tp, cfg.num_heads, cfg.num_kv_heads,
@@ -530,6 +602,26 @@ def verify_step(params, tokens, cache, *, cfg, pcfg, positions,
                               mrope_positions=mrope_positions, cache=cache,
                               decode=True, block_tables=block_tables)
     logits = E.lm_head_logits(params["embedding"], h)
+    return logits, new_cache
+
+
+def packed_step(params, tokens, cache, *, cfg, pcfg, positions, seg_slots,
+                sample_idx, block_tables=None):
+    """One packed hybrid forward (DESIGN.md §6): tokens (1, T) carries
+    prefill-chunk segments, single-token decode slots, and speculative
+    verify windows concatenated along one token axis; ``seg_slots`` (T,)
+    maps each token to its owning cache row (legacy) or block-table row
+    (paged), -1 = padding.  ``sample_idx`` (Nseg, W) indexes each
+    segment's sampling window into the packed axis (row 0 = the position
+    whose logits a plain sample would use; rows 1..γ the verify window;
+    -1 = unused, clamped — the engine masks host-side).  Returns (logits
+    local shard (Nseg, W, V_loc), updated cache)."""
+    h, new_cache, _ = forward(params, tokens, cfg=cfg, pcfg=pcfg,
+                              positions=positions, cache=cache,
+                              return_kv=True, block_tables=block_tables,
+                              packed_slots=seg_slots)
+    h_sel = h[0][jnp.maximum(sample_idx, 0)]          # (Nseg, W, d)
+    logits = E.lm_head_logits(params["embedding"], h_sel)
     return logits, new_cache
 
 

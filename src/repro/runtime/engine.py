@@ -30,10 +30,20 @@ commits the longest accepted prefix + 1 token, and rejected KV is rolled
 back by block-table truncation (paged) or left to the
 overwrite-before-query invariant (legacy slots) — DESIGN.md §8.  Greedy
 spec output is token-identical to plain greedy decoding.
+
+Packed hybrid batching (``SchedulerConfig.packed``, DESIGN.md §6): the
+two dispatches above collapse into ONE forward per iteration — prefill
+segments, decode slots, and verify windows ride a single packed token
+axis through ``ModelApi.packed_step``, so the TokenWeave threshold sees
+the true combined iteration size (mixed iterations whose halves are each
+sub-threshold now weave).  Token-identical to the two-dispatch engine
+under greedy sampling; transformer families only, and sliding-window
+models need the paged backend (mask-enforced windows).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List
 
 import jax
@@ -41,6 +51,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.splitting import pad_to_multiple
+from repro.models import transformer as TRX
 from repro.models.build import ModelApi
 from repro.runtime import kv_cache as KC
 from repro.runtime import paging as PG
@@ -48,7 +60,7 @@ from repro.runtime import spec as SP
 from repro.runtime.paging import BlockManager
 from repro.runtime.requests import Request, State
 from repro.runtime.sampler import sample
-from repro.runtime.scheduler import Scheduler, SchedulerConfig
+from repro.runtime.scheduler import (PackedPlan, Scheduler, SchedulerConfig)
 from repro.runtime.spec import SpecStats
 
 
@@ -58,7 +70,23 @@ class EngineStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     completed: int = 0
+    forwards: int = 0          # model dispatches (2/iter two-dispatch peak)
+    weave_forwards: int = 0    # dispatches whose static shape fires the weave
+    forward_tokens: int = 0    # real (non-padding) tokens across dispatches
+    max_forward_tokens: int = 0  # largest REAL token count in one dispatch
     spec: SpecStats = dataclasses.field(default_factory=SpecStats)
+
+    @property
+    def weave_rate(self) -> float:
+        """Fraction of model dispatches that ran the TokenWeave split —
+        the §6 packed-batching payoff metric: mixed iterations that
+        two-dispatch judges as two sub-threshold halves count as weave
+        misses there and (usually) one weave hit when packed."""
+        return self.weave_forwards / self.forwards if self.forwards else 0.0
+
+    @property
+    def tokens_per_forward(self) -> float:
+        return self.forward_tokens / self.forwards if self.forwards else 0.0
 
 
 class Engine:
@@ -78,6 +106,26 @@ class Engine:
         self._pspec = api.specs()
         self._is_ssm = api.cfg.family == "ssm"
         self.paged = bool(scfg.paged)
+
+        self.packed = bool(scfg.packed)
+        if self.packed:
+            if self._is_ssm:
+                raise ValueError("packed hybrid batching scatters per-token "
+                                 "KV; ssm state has no token axis — use the "
+                                 "two-dispatch path")
+            if not hasattr(api.mod, "packed_step"):
+                raise ValueError(
+                    f"packed batching needs a packed hybrid step; family "
+                    f"{api.cfg.family!r} has none")
+            if api.pcfg.seq_shard_kv:
+                raise ValueError("packed steps gather full cache rows "
+                                 "locally; disable seq_shard_kv")
+            if not scfg.paged and api.cfg.sliding_window:
+                raise ValueError(
+                    "packed scatter into a sliding-window ring buffer could "
+                    "evict keys earlier packed queries still need; use the "
+                    "paged backend (full-length storage, mask-enforced "
+                    "windows)")
 
         self.spec_gamma = int(scfg.spec_gamma)
         self.draft = None
@@ -313,6 +361,50 @@ class Engine:
         self._jit_cache[key] = jfn
         return jfn
 
+    def _packed_fn(self, t: int, w: int):
+        """Jitted packed hybrid step (DESIGN.md §6): ONE forward over the
+        (1, t) packed token axis, then unified sampling over per-segment
+        windows — ``w == 1`` plain sampling at each segment's last valid
+        token, ``w == gamma+1`` speculative rejection sampling (segments
+        without a draft have all-(-1) draft rows, for which verification
+        degenerates to exactly the plain sample of window row 0)."""
+        key = ("packed", t, w)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        api = self.api
+        paged = self.paged
+
+        def fn(params, cache, tokens, positions, seg_slots, sample_idx,
+               *rest):
+            rest = list(rest)
+            bt = rest.pop(0) if paged else None
+            draft = rest.pop(0) if w > 1 else None
+            rng = rest.pop(0)
+            logits, new_cache = api.packed_step(
+                params, tokens, cache, positions, seg_slots=seg_slots,
+                sample_idx=sample_idx, block_tables=bt)
+            if w > 1:
+                n_acc, emit = SP.verify_tokens(
+                    logits, draft, rng, vocab_size=api.cfg.vocab_size,
+                    tp_axis=api.pcfg.tp_axis, temperature=self.temperature,
+                    top_k=self.top_k, top_p=self.top_p)
+            else:
+                n_acc = jnp.zeros(logits.shape[0], jnp.int32)
+                emit = sample(logits, vocab_size=api.cfg.vocab_size,
+                              tp_axis=api.pcfg.tp_axis,
+                              temperature=self.temperature,
+                              top_k=self.top_k, top_p=self.top_p, key=rng)
+            return n_acc, emit, new_cache
+
+        n_plain = 5 + (1 if paged else 0) + (1 if w > 1 else 0)
+        sm = jax.shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(self._pspec, self._cspec) + (P(),) * n_plain,
+            out_specs=(P(), P(), self._cspec), check_vma=False)
+        jfn = jax.jit(sm, donate_argnums=(1,))
+        self._jit_cache[key] = jfn
+        return jfn
+
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
@@ -342,6 +434,9 @@ class Engine:
         self._step_count += 1
         self.stats.steps += 1
 
+        if isinstance(plan, PackedPlan):
+            self._run_packed(plan)
+            return True
         if plan.prefill is not None:
             self._run_prefill(*plan.prefill)
         if plan.decode_slots:
@@ -350,6 +445,20 @@ class Engine:
             else:
                 self._run_decode()
         return True
+
+    def _note_forward(self, b: int, s: int, n_real: int, *,
+                      decode: bool = False, packed: bool = False):
+        """Record one model dispatch: its static (b, s) shape decides the
+        weave (host-side mirror of the trace-time split decision), its
+        real token count feeds tokens/forward."""
+        self.stats.forwards += 1
+        self.stats.forward_tokens += n_real
+        self.stats.max_forward_tokens = max(self.stats.max_forward_tokens,
+                                            n_real)
+        if TRX.weave_decision(b, s, tp=self.api.tp, pcfg=self.api.pcfg,
+                              decode=decode, packed=packed,
+                              paged_pool=self.paged and decode):
+            self.stats.weave_forwards += 1
 
     def run(self, max_steps: int = 100000) -> List[Request]:
         while not self.sched.all_done() and max_steps > 0:
@@ -409,6 +518,60 @@ class Engine:
         return decoding()
 
     # ------------------------------------------------------------------
+    # per-request commit helpers — ONE implementation shared by the
+    # two-dispatch and packed paths, so cache-invalidation / registration
+    # fixes can never diverge between them
+    # ------------------------------------------------------------------
+    def _commit_prefill(self, r: Request, tok: int):
+        """After a prefill chunk advanced ``r.prefill_pos``: register the
+        filled blocks and, when the context completed, commit the first
+        sampled token (dropped for recompute-readmissions, whose pending
+        decode input was already emitted) and move to DECODE."""
+        if self.paged:
+            self.block_mgr.register_filled(r.rid, r.context_tokens,
+                                           r.prefill_pos)
+        if r.prefill_done:
+            if r.resumed:
+                r.resumed = False
+            else:
+                r.output.append(tok)
+                r.first_token_step = self._step_count
+            r.state = State.DECODE
+            self._maybe_finish(r)
+
+    def _commit_decode(self, r: Request, tok: int):
+        n_written = r.length  # positions [0, length-1] now in cache
+        r.output.append(tok)
+        self.stats.decode_tokens += 1
+        if self.paged and n_written % self.scfg.block_size == 0:
+            # a block just filled: make it hittable for future prompts
+            self.block_mgr.register_filled(
+                r.rid, r.prompt + r.output[:-1], n_written)
+        self._maybe_finish(r)
+
+    def _commit_verify(self, r: Request, prop: List[int], n_acc: int,
+                       emit: int):
+        """Commit the longest accepted draft prefix + the corrected/bonus
+        token and roll back rejected KV (paged: block-table truncation;
+        legacy slots need none by the overwrite-before-query invariant)."""
+        n = min(n_acc, len(prop))
+        base_len = r.length          # L: window wrote L-1 .. L-1+|prop|
+        r.output.extend(prop[:n] + [emit])
+        st = self.stats.spec
+        st.draft_proposed += len(prop)
+        st.draft_accepted += n
+        st.emitted += n + 1
+        self.stats.decode_tokens += n + 1
+        if self.paged:
+            # rollback: keep exactly the blocks covering the committed
+            # context (positions 0 .. L-1+n); rejected draft KV beyond
+            # them is dropped with the tail blocks, never copied
+            self.block_mgr.truncate(r.rid, base_len + n)
+            self.block_mgr.register_filled(
+                r.rid, r.prompt + r.output[:-1], base_len + n)
+        self._maybe_finish(r)
+
+    # ------------------------------------------------------------------
     def _run_prefill(self, group: List[Request], chunk: int):
         b_sel = len(group)
         if self._is_ssm:
@@ -445,22 +608,11 @@ class Engine:
                                  jnp.asarray(slot_ids), jnp.asarray(offsets),
                                  jnp.asarray(last_idx), self._next_key())
         tok = np.asarray(tok)
-        self.stats.prefill_tokens += int((positions >= 0).sum())
+        n_real = int((positions >= 0).sum())
+        self.stats.prefill_tokens += n_real
+        self._note_forward(b_sel, chunk, n_real)
         for i, r in enumerate(group):
-            if self.paged:
-                self.block_mgr.register_filled(r.rid, r.context_tokens,
-                                               r.prefill_pos)
-            if r.prefill_done:
-                if r.resumed:
-                    # recompute-readmission: output[-1] is still the
-                    # pending decode input; the chunk's sample duplicates
-                    # a token we already emitted — drop it
-                    r.resumed = False
-                else:
-                    r.output.append(int(tok[i]))
-                    r.first_token_step = self._step_count
-                r.state = State.DECODE
-                self._maybe_finish(r)
+            self._commit_prefill(r, int(tok[i]))
 
     def _run_decode(self):
         if self.paged:
@@ -492,15 +644,9 @@ class Engine:
                                  jnp.asarray(tokens), jnp.asarray(positions),
                                  self._next_key())
         tok = np.asarray(tok)
-        self.stats.decode_tokens += len(reqs)
+        self._note_forward(bmax, 1, len(reqs), decode=True)
         for r in list(reqs):
-            n_written = r.length  # positions [0, length-1] now in cache
-            r.output.append(int(tok[r.slot]))
-            if self.paged and n_written % self.scfg.block_size == 0:
-                # a block just filled: make it hittable for future prompts
-                self.block_mgr.register_filled(
-                    r.rid, r.prompt + r.output[:-1], n_written)
-            self._maybe_finish(r)
+            self._commit_decode(r, int(tok[r.slot]))
 
     # ------------------------------------------------------------------
     # speculative decoding (runtime/spec.py, DESIGN.md §8)
@@ -514,6 +660,24 @@ class Engine:
             if not self.block_mgr.ensure_writable(r.rid, r.length - 1 + j):
                 return j - 1
         return want
+
+    def _capped_drafts(self, reqs: List[Request]) -> Dict[int, List[int]]:
+        """Draft proposals for the given DECODE requests, capped so the
+        verify window never overshoots max_new_tokens (the verify always
+        commits >= 1 extra token) or the cache ceiling, and shrunk — never
+        preempting a peer — to the paged blocks that can actually grow.
+        ONE implementation shared by the two-dispatch and packed paths."""
+        gamma = self.spec_gamma
+        props = self.draft.propose([r.prompt + r.output for r in reqs])
+        capped: Dict[int, List[int]] = {}
+        for r, prop in zip(reqs, props):
+            cap = min(gamma, r.max_new_tokens - len(r.output) - 1,
+                      self.scfg.max_len - r.length)
+            prop = list(prop[:max(cap, 0)])
+            if self.paged and prop:
+                prop = prop[:self._grow_for_draft(r, len(prop))]
+            capped[r.rid] = prop
+        return capped
 
     def _run_verify(self):
         """One speculative iteration over every DECODE request: draft
@@ -531,18 +695,7 @@ class Engine:
             if not reqs:
                 return
 
-        props = self.draft.propose(
-            [r.prompt + r.output for r in reqs])
-        capped: Dict[int, List[int]] = {}
-        for r, prop in zip(reqs, props):
-            # never draft past max_new_tokens (the verify always commits
-            # >= 1 extra token) or the cache ceiling
-            cap = min(gamma, r.max_new_tokens - len(r.output) - 1,
-                      self.scfg.max_len - r.length)
-            prop = list(prop[:max(cap, 0)])
-            if self.paged and prop:
-                prop = prop[:self._grow_for_draft(r, len(prop))]
-            capped[r.rid] = prop
+        capped = self._capped_drafts(reqs)
         if not any(capped.values()):
             # nothing drafted anywhere: a gamma+1-wide verify would pay
             # (gamma+1)x decode compute to commit one token per request —
@@ -583,26 +736,121 @@ class Engine:
                 jnp.asarray(positions), jnp.asarray(draft), rng)
         n_acc = np.asarray(n_acc)
         emit = np.asarray(emit)
+        self._note_forward(bmax, s_v,
+                           sum(1 + len(capped[r.rid]) for r in reqs),
+                           decode=True)
 
-        st = self.stats.spec
-        st.verify_steps += 1
+        self.stats.spec.verify_steps += 1
         for r in list(reqs):
-            prop = capped[r.rid]
-            n = min(int(n_acc[r.slot]), len(prop))
-            base_len = r.length          # L: window wrote L-1 .. L-1+|prop|
-            r.output.extend(prop[:n] + [int(emit[r.slot])])
-            st.draft_proposed += len(prop)
-            st.draft_accepted += n
-            st.emitted += n + 1
-            self.stats.decode_tokens += n + 1
+            self._commit_verify(r, capped[r.rid], int(n_acc[r.slot]),
+                                int(emit[r.slot]))
+
+    # ------------------------------------------------------------------
+    # packed hybrid batching (DESIGN.md §6)
+    # ------------------------------------------------------------------
+    def _run_packed(self, plan: PackedPlan):
+        """ONE forward for the whole iteration: prefill-chunk segments,
+        single-token decode slots, and speculative verify windows are
+        concatenated along a single (1, T) token axis (T padded to a
+        recompilation bucket) and dispatched through
+        ``ModelApi.packed_step``; unified sampling/verification then
+        commits every segment kind from the same (n_acc, emit) pair."""
+        gamma = self.spec_gamma
+        w = gamma + 1 if gamma else 1
+        if self.paged:
+            # grow/COW the decode write cells first; this can preempt or
+            # ceiling-finish DECODE requests, so re-filter the plan
+            self._ensure_decode_blocks()
+        segs = [s for s in plan.segments
+                if s.req.state == (State.PREFILL if s.kind == "prefill"
+                                   else State.DECODE)]
+        if not segs:
+            return
+
+        props: Dict[int, List[int]] = {}
+        if gamma:
+            vreqs = [s.req for s in segs if s.kind == "verify"]
+            if vreqs:
+                props = self._capped_drafts(vreqs)
+        if self.paged:
+            self._apply_fixups()
+
+        def seg_len(s):
+            if s.kind == "prefill":
+                return s.n_tokens
+            if s.kind == "verify":
+                return 1 + len(props.get(s.req.rid, []))
+            return 1
+
+        t_real = sum(seg_len(s) for s in segs)
+        pad_mult = math.lcm(self.scfg.prefill_bucket, self.api.tp)
+        t = pad_to_multiple(t_real, pad_mult)
+        bmax = self.scfg.max_batch
+        tokens = np.zeros((1, t), np.int32)
+        positions = np.full((1, t), -1, np.int32)
+        seg_slots = np.full(t, -1, np.int32)
+        sample_idx = np.full((bmax, w), -1, np.int32)
+        draft = np.full((bmax, gamma), -1, np.int32) if gamma else None
+        bt = (np.full((bmax, self.scfg.max_blocks_per_req), -1, np.int32)
+              if self.paged else None)
+
+        cur = 0
+        for s in segs:
+            r = s.req
+            m = r.slot
             if self.paged:
-                # rollback: keep exactly the blocks covering the committed
-                # context (positions 0 .. L-1+n); rejected draft KV beyond
-                # them is dropped with the tail blocks, never copied
-                self.block_mgr.truncate(r.rid, base_len + n)
-                self.block_mgr.register_filled(
-                    r.rid, r.prompt + r.output[:-1], base_len + n)
-            self._maybe_finish(r)
+                bt[m] = self.block_mgr.table_array(r.rid)
+            if s.kind == "prefill":
+                ctx = r.context_tokens
+                take = s.n_tokens
+                tokens[0, cur:cur + take] = \
+                    ctx[r.prefill_pos:r.prefill_pos + take]
+                positions[0, cur:cur + take] = np.arange(
+                    r.prefill_pos, r.prefill_pos + take)
+                seg_slots[cur:cur + take] = m
+                sample_idx[m, 0] = cur + take - 1
+                r.prefill_pos += take
+                cur += take
+            else:
+                prop = props.get(r.rid, []) if s.kind == "verify" else []
+                tokens[0, cur] = r.output[-1]
+                positions[0, cur] = r.length - 1
+                seg_slots[cur:cur + 1 + len(prop)] = m
+                sample_idx[m, 0] = cur
+                for j, d in enumerate(prop):
+                    tokens[0, cur + 1 + j] = d
+                    positions[0, cur + 1 + j] = r.length + j
+                    draft[m, j] = d
+                    sample_idx[m, 1 + j] = cur + 1 + j
+                cur += 1 + len(prop)
+
+        args = [self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(positions), jnp.asarray(seg_slots),
+                jnp.asarray(sample_idx)]
+        if self.paged:
+            args.append(jnp.asarray(bt))
+        if w > 1:
+            args.append(jnp.asarray(draft))
+        args.append(self._next_key())
+        fn = self._packed_fn(t, w)
+        n_acc, emit, self.cache = fn(*args)
+        n_acc = np.asarray(n_acc)
+        emit = np.asarray(emit)
+        self._note_forward(1, t, t_real, packed=True)
+
+        if any(s.kind == "verify" for s in segs):
+            self.stats.spec.verify_steps += 1
+        for s in segs:
+            r = s.req
+            m = r.slot
+            if s.kind == "prefill":
+                self.stats.prefill_tokens += s.n_tokens
+                self._commit_prefill(r, int(emit[m]))
+            elif s.kind == "decode":
+                self._commit_decode(r, int(emit[m]))
+            else:
+                self._commit_verify(r, props.get(r.rid, []),
+                                    int(n_acc[m]), int(emit[m]))
 
     def _maybe_finish(self, r: Request):
         if len(r.output) >= r.max_new_tokens:

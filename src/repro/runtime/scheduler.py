@@ -29,11 +29,22 @@ Speculative decoding (``spec_gamma > 0``) charges the verify batch —
 gamma+1 tokens per decoding sequence — against ``chunk_tokens`` before
 sizing the prefill chunk, so the combined iteration token count stays
 bounded (DESIGN.md §8).
+
+Packed mode (``packed=True``, DESIGN.md §6) replaces the two dispatches
+with ONE plan per iteration: decode slots (1 token), speculative verify
+windows (γ+1 tokens, worst case — the engine may shrink a draft), and
+per-request prefill takes are concatenated along a single token axis.
+Prefill takes need no rectangularity (the packed axis is ragged by
+construction), so the whole remaining ``chunk_tokens`` budget is usable
+every iteration, and the engine's single forward judges the weave
+threshold against the TRUE combined token count.  Invariant (tests pin
+it): ``PackedPlan.total_tokens <= chunk_tokens``, which requires
+``chunk_tokens >= max_batch * (spec_gamma + 1)`` — validated here.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 from repro.runtime.requests import Request, State
 
@@ -52,6 +63,18 @@ class SchedulerConfig:
     # --- speculative decoding (runtime/spec.py, DESIGN.md §8) ---
     spec_gamma: int = 0             # draft tokens per verify step (0 = off)
     spec_ngram: int = 3             # n-gram length of the default draft
+    # --- packed hybrid batching (one forward per iteration, DESIGN.md §6) --
+    packed: bool = False
+
+    def __post_init__(self):
+        if self.packed:
+            w = self.spec_gamma + 1
+            if self.chunk_tokens < self.max_batch * w:
+                raise ValueError(
+                    f"packed mode needs chunk_tokens >= max_batch * "
+                    f"(spec_gamma+1) = {self.max_batch * w} so mandatory "
+                    f"decode/verify slots always fit the packed budget "
+                    f"(got {self.chunk_tokens})")
 
     @property
     def max_blocks_per_req(self) -> int:
@@ -66,6 +89,29 @@ class SchedulerConfig:
 class ScheduleStep:
     decode_slots: List[int]
     prefill: Optional[Tuple[List[Request], int]]  # (requests, chunk_len)
+
+
+@dataclasses.dataclass
+class PackedSegment:
+    """One contiguous run of the packed token axis (DESIGN.md §6).
+
+    kind encodes the cache interaction: ``prefill`` scatters ``n_tokens``
+    new context positions; ``decode`` carries the single pending input;
+    ``verify`` budgets a speculative window of 1 + gamma tokens (the
+    engine packs 1 + len(draft) actual tokens, never more).  Query
+    positions and causal extent derive from the owning request: a
+    segment's tokens occupy absolute positions ``pos0 .. pos0+n-1`` and
+    attend the request's cache rows up to their own position.
+    """
+    req: Request
+    kind: str                       # "prefill" | "decode" | "verify"
+    n_tokens: int                   # budgeted tokens (verify: worst case)
+
+
+@dataclasses.dataclass
+class PackedPlan:
+    segments: List[PackedSegment]
+    total_tokens: int               # sum of budgeted segment tokens
 
 
 class Scheduler:
@@ -119,13 +165,15 @@ class Scheduler:
         self.waiting.insert(0, req)
 
     # ---- one iteration ----------------------------------------------------
-    def next_step(self) -> Optional[ScheduleStep]:
+    def next_step(self) -> Optional[Union[ScheduleStep, "PackedPlan"]]:
         self._admit()
         decode_slots = [r.slot for r in self.active
                         if r is not None and r.state == State.DECODE]
 
         prefilling = [r for r in self.active
                       if r is not None and r.state == State.PREFILL]
+        if self.cfg.packed:
+            return self._next_packed(prefilling)
         prefill = None
         budget = self.cfg.chunk_tokens
         if self.cfg.spec_gamma and decode_slots:
@@ -155,6 +203,34 @@ class Scheduler:
         if not decode_slots and prefill is None:
             return None
         return ScheduleStep(decode_slots=decode_slots, prefill=prefill)
+
+    def _next_packed(self, prefilling: List[Request]) -> Optional[PackedPlan]:
+        """Build one packed plan: mandatory decode/verify segments first
+        (charged at their worst-case width), then per-request prefill
+        takes filling the remaining ``chunk_tokens`` budget.  Prefill
+        takes are ragged — no bucketing, no shared chunk length — so the
+        budget is fully usable; the ENGINE pads only the plan total (to a
+        recompilation bucket), never individual segments."""
+        budget = self.cfg.chunk_tokens
+        w = self.cfg.spec_gamma + 1 if self.cfg.spec_gamma else 1
+        kind = "verify" if self.cfg.spec_gamma else "decode"
+        segs = []
+        for r in self.active:
+            if r is not None and r.state == State.DECODE:
+                segs.append(PackedSegment(req=r, kind=kind, n_tokens=w))
+                budget -= w
+        for r in prefilling:
+            if budget <= 0:
+                break
+            take = min(budget, len(r.context_tokens) - r.prefill_pos)
+            if take <= 0:
+                continue
+            segs.append(PackedSegment(req=r, kind="prefill", n_tokens=take))
+            budget -= take
+        if not segs:
+            return None
+        return PackedPlan(segments=segs,
+                          total_tokens=sum(s.n_tokens for s in segs))
 
     # ---- bookkeeping ------------------------------------------------------
     def finish(self, req: Request, step: int):

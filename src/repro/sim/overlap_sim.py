@@ -278,3 +278,54 @@ def spec_decode_summary(cfg: ModelConfig, batch: int, gamma: int,
     out["tokens_per_step"] = expected_tokens_per_step(gamma, alpha)
     out["verify_tokens"] = float(batch * (gamma + 1))
     return out
+
+
+# --------------------------------------------------------------------------
+# packed hybrid batching (DESIGN.md §6): the two-dispatch engine judges the
+# decode batch and the prefill chunk against the weave threshold SEPARATELY;
+# a packed iteration is one forward over the combined token count
+# --------------------------------------------------------------------------
+
+def packed_hybrid_latency(cfg: ModelConfig, mode: str, decode_tokens: int,
+                          chunk_tokens: int, *, tp: int = 8, ctx: int = 8192,
+                          hw: Optional[HW] = None,
+                          n_layers: int = 4) -> Dict[str, float]:
+    """One mixed continuous-batching iteration, both dispatch schemes.
+
+    two_dispatch: decode forward (``decode_tokens``) + prefill forward
+    (``chunk_tokens``), each independently falling back to the unsplit
+    path when it alone sits under the wave/threshold floor.
+    packed: ONE forward over ``decode_tokens + chunk_tokens`` — the weave
+    decision sees the true combined iteration size, which is exactly the
+    regime the two-dispatch scheme misses: each half sub-threshold, the
+    sum comfortably above it.
+    """
+    kw = dict(tp=tp, ctx=ctx, hw=hw, n_layers=n_layers)
+    two = (e2e_latency(cfg, mode, decode_tokens, **kw)
+           + e2e_latency(cfg, mode, chunk_tokens, **kw))
+    packed = e2e_latency(cfg, mode, decode_tokens + chunk_tokens, **kw)
+    return {"two_dispatch": two, "packed": packed}
+
+
+def packed_summary(cfg: ModelConfig, decode_tokens: int, chunk_tokens: int,
+                   *, tp: int = 8, ctx: int = 8192,
+                   hw: Optional[HW] = None) -> Dict[str, float]:
+    """The weave-crossover grid the `serve/packed` benchmark reports.
+
+    ``packed_weaves`` / ``halves_weave`` expose the split decisions so the
+    interesting cell — halves both unsplit, packed split — is visible:
+    there ``two/tokenweave == two/fuseonly`` (the weave never fired) while
+    ``packed/tokenweave < packed/fuseonly`` (it did)."""
+    hw = hw or HW()
+    out: Dict[str, float] = {}
+    for mode in ("fuseonly", "tokenweave"):
+        r = packed_hybrid_latency(cfg, mode, decode_tokens, chunk_tokens,
+                                  tp=tp, ctx=ctx, hw=hw)
+        out[f"two/{mode}"] = r["two_dispatch"]
+        out[f"packed/{mode}"] = r["packed"]
+    out["halves_weave"] = float(
+        smart_split(decode_tokens, hw.tile) is not None
+        or smart_split(chunk_tokens, hw.tile) is not None)
+    out["packed_weaves"] = float(
+        smart_split(decode_tokens + chunk_tokens, hw.tile) is not None)
+    return out
