@@ -3,15 +3,21 @@
 
 Compares the deterministic serving metrics a benchmark run wrote with
 ``python -m benchmarks.run --json BENCH_serve.json`` against the committed
-``benchmarks/baseline.json`` within a relative tolerance (default ±15%).
-Every baseline key must be present and in range; a zero baseline must stay
-zero (these are counters — preemptions appearing out of nowhere IS a
-regression).  Metrics present in the current run but absent from the
-baseline are reported as a reminder to extend the baseline, not a failure
-— new coverage must never be punished.
+``benchmarks/baseline.json``:
+
+* the KEY SETS must agree exactly — a metric missing from the run means a
+  benchmark silently stopped emitting it (a gate going vacuous), and a
+  metric missing from the baseline means new coverage nobody is tracking
+  yet; both fail with the full list of missing/extra names so the fix
+  (extend the baseline, or restore the benchmark) is obvious.  Pass
+  ``--allow-extra`` to downgrade extra-only disagreements to a note (local
+  iteration on a new benchmark before its baseline lands).
+* every shared metric must be within a relative tolerance (default ±15%);
+  a zero baseline must stay zero (these are counters — preemptions
+  appearing out of nowhere IS a regression).
 
     python scripts/check_bench.py BENCH_serve.json \
-        [--baseline benchmarks/baseline.json] [--tol 0.15]
+        [--baseline benchmarks/baseline.json] [--tol 0.15] [--allow-extra]
 """
 from __future__ import annotations
 
@@ -20,14 +26,33 @@ import json
 import sys
 
 
-def compare(cur: dict, base: dict, tol: float) -> list[str]:
+def keyset_failures(cur: dict, base: dict,
+                    allow_extra: bool = False) -> list[str]:
+    """Key-set disagreement as failure strings (empty = sets agree)."""
+    missing = sorted(set(base) - set(cur))
+    extra = sorted(set(cur) - set(base))
     failures = []
-    for key in sorted(base):
+    if missing:
+        failures.append(
+            f"{len(missing)} baseline metric(s) MISSING from the current "
+            f"run (a benchmark stopped emitting them): "
+            + ", ".join(missing))
+    if extra and not allow_extra:
+        failures.append(
+            f"{len(extra)} metric(s) in the current run but NOT in the "
+            f"baseline (extend the baseline to start tracking them): "
+            + ", ".join(extra))
+    elif extra:
+        for k in extra:
+            print(f"note  {k}: not in baseline (current={cur[k]:g})")
+    return failures
+
+
+def compare(cur: dict, base: dict, tol: float) -> list[str]:
+    """Per-metric tolerance check over the SHARED keys."""
+    failures = []
+    for key in sorted(set(base) & set(cur)):
         b = float(base[key])
-        if key not in cur:
-            failures.append(f"{key}: missing from current run "
-                            f"(baseline {b:g})")
-            continue
         c = float(cur[key])
         if b == 0.0:
             ok = c == 0.0
@@ -42,30 +67,35 @@ def compare(cur: dict, base: dict, tol: float) -> list[str]:
     return failures
 
 
+def run_checks(cur: dict, base: dict, tol: float,
+               allow_extra: bool = False) -> list[str]:
+    return (keyset_failures(cur, base, allow_extra=allow_extra)
+            + compare(cur, base, tol))
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("current", help="metrics JSON from benchmarks.run --json")
     p.add_argument("--baseline", default="benchmarks/baseline.json")
     p.add_argument("--tol", type=float, default=0.15,
                    help="relative tolerance (default 0.15 = ±15%%)")
+    p.add_argument("--allow-extra", action="store_true",
+                   help="don't fail on metrics absent from the baseline "
+                        "(local runs before a new baseline lands)")
     args = p.parse_args()
     with open(args.current) as f:
         cur = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
 
-    failures = compare(cur, base, args.tol)
-    extra = sorted(set(cur) - set(base))
-    for key in extra:
-        print(f"note  {key}: not in baseline (current={cur[key]:g}) — "
-              f"extend {args.baseline} to start tracking it")
+    failures = run_checks(cur, base, args.tol, allow_extra=args.allow_extra)
     if failures:
-        print(f"\n{len(failures)} metric(s) out of tolerance:",
-              file=sys.stderr)
+        print(f"\n{len(failures)} check(s) failed:", file=sys.stderr)
         for f_ in failures:
             print(f"  {f_}", file=sys.stderr)
         sys.exit(1)
-    print(f"\nall {len(base)} baseline metrics within ±{args.tol:.0%}")
+    print(f"\nall {len(base)} baseline metrics present and within "
+          f"±{args.tol:.0%}")
 
 
 if __name__ == "__main__":

@@ -64,17 +64,78 @@ from repro.runtime.scheduler import (PackedPlan, Scheduler, SchedulerConfig)
 from repro.runtime.spec import SpecStats
 
 
+def _percentile(xs: List[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy default) over a copy —
+    deterministic, no numpy dtype surprises in JSON metrics."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    if len(s) == 1:
+        return float(s[0])
+    pos = (len(s) - 1) * q
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(s) - 1)
+    return float(s[lo] + (s[hi] - s[lo]) * (pos - lo))
+
+
+@dataclasses.dataclass
+class LatencyStats:
+    """Per-request serving latencies in VIRTUAL time (runtime/server.py's
+    deterministic clock, DESIGN.md §10) plus SLO attainment.
+
+    ``slo_total`` counts every request whose outcome the service is
+    accountable for: completions and deadline expiries.  User-initiated
+    cancellations are excluded — the client walked away, the server did
+    not fail it.  ``goodput`` is the SLO-attainment fraction the paper's
+    serving sections report (requests served within their deadline /
+    accountable requests)."""
+    ttft: List[float] = dataclasses.field(default_factory=list)
+    tpot: List[float] = dataclasses.field(default_factory=list)
+    e2e: List[float] = dataclasses.field(default_factory=list)
+    slo_total: int = 0
+    slo_met: int = 0
+
+    def record(self, r) -> None:
+        if r.finish_reason != "cancelled":
+            self.slo_total += 1
+            self.slo_met += int(r.slo_ok)
+        if r.ttft is not None:
+            self.ttft.append(r.ttft)
+        if r.tpot is not None:
+            self.tpot.append(r.tpot)
+        if r.e2e_latency is not None:
+            self.e2e.append(r.e2e_latency)
+
+    @property
+    def goodput(self) -> float:
+        return self.slo_met / self.slo_total if self.slo_total else 0.0
+
+    def percentile(self, metric: str, q: float) -> float:
+        return _percentile(getattr(self, metric), q)
+
+    def summary(self) -> Dict[str, float]:
+        out: Dict[str, float] = {"goodput": self.goodput,
+                                 "requests": float(self.slo_total)}
+        for m in ("ttft", "tpot", "e2e"):
+            for q in (0.5, 0.9, 0.99):
+                out[f"{m}_p{int(q * 100)}"] = self.percentile(m, q)
+        return out
+
+
 @dataclasses.dataclass
 class EngineStats:
     steps: int = 0
     prefill_tokens: int = 0
     decode_tokens: int = 0
     completed: int = 0
+    cancelled: int = 0         # user-initiated aborts (online serving)
+    expired: int = 0           # deadline-expiry aborts (online serving)
     forwards: int = 0          # model dispatches (2/iter two-dispatch peak)
     weave_forwards: int = 0    # dispatches whose static shape fires the weave
     forward_tokens: int = 0    # real (non-padding) tokens across dispatches
     max_forward_tokens: int = 0  # largest REAL token count in one dispatch
     spec: SpecStats = dataclasses.field(default_factory=SpecStats)
+    latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
 
     @property
     def weave_rate(self) -> float:
@@ -92,7 +153,8 @@ class EngineStats:
 class Engine:
     def __init__(self, api: ModelApi, mesh, params, scfg: SchedulerConfig,
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
-                 draft: SP.DraftProposer | None = None, seed: int = 0):
+                 draft: SP.DraftProposer | None = None, seed: int = 0,
+                 jit_cache: Dict | None = None):
         self.api = api
         self.mesh = mesh
         self.params = params
@@ -102,7 +164,10 @@ class Engine:
         self.top_p = top_p
         self.stats = EngineStats()
         self._step_count = 0
-        self._jit_cache: Dict = {}
+        # jit_cache may be SHARED across engines built with the same
+        # (api, mesh, scfg shapes, sampling params) — e.g. the differential
+        # harness replaying many short traces — to skip recompilation
+        self._jit_cache: Dict = {} if jit_cache is None else jit_cache
         self._pspec = api.specs()
         self._is_ssm = api.cfg.family == "ssm"
         self.paged = bool(scfg.paged)
@@ -425,6 +490,38 @@ class Engine:
                     f"{self.scfg.effective_num_blocks} (rid={req.rid})")
         req.arrival_step = self._step_count
         self.sched.add(req)
+
+    def abort(self, req: Request, reason: str = "cancelled") -> bool:
+        """Cancel a live request at ANY lifecycle point (waiting, mid-
+        prefill, mid-decode/verify), releasing every resource it holds:
+        paged blocks (including prefix-cache shared refs), the legacy cache
+        slot (stale-position reset), and its scheduler entry.  Safe only
+        BETWEEN engine steps (steps are atomic).  Returns False when the
+        request was already finished."""
+        if req.state == State.DONE:
+            return False
+        req.finish_reason = reason
+        if reason == "expired":
+            self.stats.expired += 1
+        else:
+            self.stats.cancelled += 1
+        if req.state == State.WAITING:
+            # not admitted: no slot, and (paged) no blocks — allocation
+            # happens at admission; a preempted request already freed its
+            self.sched.remove_waiting(req)
+            req.state = State.DONE
+            return True
+        if self.paged:
+            # drops private AND prefix-shared refs; cached blocks park in
+            # the LRU (still hittable), so cancelling never poisons the
+            # prefix cache — only releases this request's references
+            self.block_mgr.free_request(req.rid)
+        elif not self._is_ssm:
+            self.cache = KC.reset_slots(self.cache, np.asarray([req.slot]))
+        self.sched.active[req.slot] = None
+        req.slot = None
+        req.state = State.DONE
+        return True
 
     def step(self) -> bool:
         """Run one engine iteration. Returns False when idle."""
@@ -867,5 +964,6 @@ class Engine:
             # release slot state: stale ring-buffer positions from a
             # finished request must not leak into the slot's next owner
             self.cache = KC.reset_slots(self.cache, np.asarray([r.slot]))
+        r.finish_reason = r.finish_reason or "stop"
         self.sched.finish(r, self._step_count)
         self.stats.completed += 1

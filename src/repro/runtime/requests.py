@@ -43,6 +43,14 @@ class Request:
     resumed: bool = False             # re-prefilling after preemption
     preemptions: int = 0
     prompt_hit_tokens: int = 0        # prefix-cache hit at last admission
+    # --- online serving (runtime/server.py, DESIGN.md §10) ---
+    # all times are VIRTUAL (deterministic server clock), not wall clock
+    arrival_time: float = 0.0         # when the request enters the system
+    deadline: Optional[float] = None  # absolute e2e SLO deadline (None=none)
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    finish_reason: str = ""           # "" | "stop" | "cancelled" | "expired"
 
     @property
     def context_tokens(self) -> List[int]:
@@ -65,6 +73,41 @@ class Request:
     @property
     def prefill_done(self) -> bool:
         return self.prefill_pos >= len(self.context_tokens)
+
+    # --- SLO metrics (virtual time; populated by runtime/server.py) ---
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token AFTER the first (None until finished or
+        when only one token was produced)."""
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        if len(self.output) <= 1:
+            return None
+        return ((self.finish_time - self.first_token_time)
+                / (len(self.output) - 1))
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    @property
+    def slo_ok(self) -> bool:
+        """Completed (neither cancelled nor expired) within the deadline;
+        a request without a deadline only needs to complete."""
+        if self.finish_reason != "stop":
+            return False
+        if self.deadline is None:
+            return True
+        return self.finish_time is not None and \
+            self.finish_time <= self.deadline
 
 
 def fixed_trace(n_requests: int, input_len: int, output_len: int,
@@ -89,6 +132,56 @@ def repetitive_trace(n_requests: int, motif_len: int, repeats: int,
         reqs.append(Request(rid=i, prompt=motif * repeats,
                             max_new_tokens=output_len))
     return reqs
+
+
+# --------------------------------------------------------------------------
+# arrival processes (online serving, runtime/server.py / DESIGN.md §10):
+# stamp ``Request.arrival_time`` on an existing trace.  All are driven by an
+# explicit seed/Random, so a trace + arrival process is fully reproducible.
+# --------------------------------------------------------------------------
+
+def replay_arrivals(reqs: List[Request],
+                    times: List[float]) -> List[Request]:
+    """Replay recorded arrival times (e.g. from a production trace dump).
+    Requests are re-ordered by arrival time (stable for ties)."""
+    if len(times) != len(reqs):
+        raise ValueError(f"{len(times)} arrival times for {len(reqs)} "
+                         f"requests")
+    for r, t in zip(reqs, times):
+        r.arrival_time = float(t)
+    reqs.sort(key=lambda r: (r.arrival_time, r.rid))
+    return reqs
+
+
+def poisson_arrivals(reqs: List[Request], rate: float,
+                     seed: Seed = 0, start: float = 0.0) -> List[Request]:
+    """Poisson process: i.i.d. exponential inter-arrival gaps with mean
+    ``1/rate`` (arrivals per virtual-time unit)."""
+    rng = _rng(seed)
+    t = start
+    times = []
+    for _ in reqs:
+        t += rng.expovariate(rate)
+        times.append(t)
+    return replay_arrivals(reqs, times)
+
+
+def bursty_arrivals(reqs: List[Request], rate: float, burst: int,
+                    off_time: float, seed: Seed = 0,
+                    start: float = 0.0) -> List[Request]:
+    """On-off (bursty) process: bursts of ``burst`` requests arriving at
+    ``rate`` (Poisson within the burst) separated by idle gaps of mean
+    ``off_time`` — the flash-crowd pattern that stresses admission and
+    makes per-iteration token counts (and thus the weave rate) swing."""
+    rng = _rng(seed)
+    t = start
+    times = []
+    for i in range(len(reqs)):
+        if i and i % max(burst, 1) == 0:
+            t += rng.expovariate(1.0 / off_time) if off_time > 0 else 0.0
+        t += rng.expovariate(rate)
+        times.append(t)
+    return replay_arrivals(reqs, times)
 
 
 def sharegpt_like_trace(n_requests: int, vocab: int, seed: Seed = 0,

@@ -65,8 +65,18 @@ class SchedulerConfig:
     spec_ngram: int = 3             # n-gram length of the default draft
     # --- packed hybrid batching (one forward per iteration, DESIGN.md §6) --
     packed: bool = False
+    # --- online admission policy (runtime/server.py, DESIGN.md §10) ---
+    # "fcfs": queue order (arrival order; preempted requests resume first).
+    # "edf":  earliest-deadline-first among waiting requests (requests
+    #         without a deadline sort last, FCFS among themselves).
+    # A callable can be plugged directly via ``Scheduler(..., policy=fn)``.
+    policy: str = "fcfs"
 
     def __post_init__(self):
+        if self.policy not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"unknown admission policy {self.policy!r}; known: "
+                f"{sorted(ADMISSION_POLICIES)}")
         if self.packed:
             w = self.spec_gamma + 1
             if self.chunk_tokens < self.max_batch * w:
@@ -83,6 +93,22 @@ class SchedulerConfig:
     @property
     def effective_num_blocks(self) -> int:
         return self.num_blocks or self.max_batch * self.max_blocks_per_req
+
+
+def _edf_key(r: Request):
+    """Earliest-deadline-first: deadline-less requests sort after every
+    deadline-carrying one and stay FCFS among themselves (stable sort on
+    the queue preserves arrival/preemption order for ties)."""
+    return (r.deadline if r.deadline is not None else float("inf"),)
+
+
+# name -> sort key over waiting requests, or None to keep queue order.
+# The sort is STABLE, so equal keys preserve arrival order and a preempted
+# request (re-queued at the front) resumes before same-priority peers.
+ADMISSION_POLICIES = {
+    "fcfs": None,
+    "edf": _edf_key,
+}
 
 
 @dataclasses.dataclass
@@ -115,21 +141,34 @@ class PackedPlan:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig, block_mgr=None):
+    def __init__(self, cfg: SchedulerConfig, block_mgr=None, policy=None):
         self.cfg = cfg
         self.block_mgr = block_mgr          # BlockManager when cfg.paged
         self.waiting: List[Request] = []
         self.active: List[Optional[Request]] = [None] * cfg.max_batch
         self.finished: List[Request] = []
+        # pluggable priority: explicit callable wins, else the named policy
+        self.policy_key = (policy if policy is not None
+                           else ADMISSION_POLICIES[cfg.policy])
 
     # ---- admission -------------------------------------------------------
     def add(self, req: Request):
         self.waiting.append(req)
 
+    def remove_waiting(self, req: Request) -> bool:
+        """Drop a not-yet-admitted request (online cancellation)."""
+        try:
+            self.waiting.remove(req)
+            return True
+        except ValueError:
+            return False
+
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.active) if r is None]
 
     def _admit(self):
+        if self.policy_key is not None and len(self.waiting) > 1:
+            self.waiting.sort(key=self.policy_key)   # stable: FCFS ties
         for slot in self._free_slots():
             if not self.waiting:
                 break

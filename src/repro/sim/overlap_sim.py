@@ -307,6 +307,106 @@ def packed_hybrid_latency(cfg: ModelConfig, mode: str, decode_tokens: int,
     return {"two_dispatch": two, "packed": packed}
 
 
+def online_load_mix(cfg: ModelConfig, mode: str, rate: float, *,
+                    mean_in: int = 161, mean_out: int = 338, tp: int = 8,
+                    ctx: int = 8192, hw: Optional[HW] = None,
+                    packed: bool = True, iters: int = 60,
+                    max_decode_tokens: int = 512,
+                    max_chunk_tokens: int = 2048) -> Dict[str, float]:
+    """Steady-state per-iteration token mix at offered load ``rate``
+    (requests per virtual-time unit), via a Little's-law fixed point.
+
+    At rate λ the engine must retire λ·mean_in prefill and λ·mean_out
+    decode tokens per unit time; with iteration time t the per-iteration
+    shares are c = λ·mean_in·t (chunk) and d = λ·mean_out·t (decode batch:
+    λ·mean_out·t sequences × 1 token).  t itself depends on (d, c) through
+    the latency model — packed: one forward over d+c; two-dispatch: two
+    forwards judged separately — so we iterate to the fixed point (damped;
+    converges because latency is flat under the wave quantum and ~linear
+    above it).  This is what makes the ONLINE weave rate load-dependent:
+    low load ⇒ tiny iterations ⇒ no weave; the packed engine crosses the
+    threshold at a LOWER offered load than two-dispatch because it judges
+    the combined d+c (DESIGN.md §10).
+
+    ``max_decode_tokens`` / ``max_chunk_tokens`` mirror the engine's
+    max_batch / chunk_tokens admission caps: past saturation the mix pins
+    at the caps (queues grow unboundedly instead — the regime where
+    goodput, not latency, is the metric) rather than diverging.
+    """
+    hw = hw or HW()
+    kw = dict(tp=tp, ctx=ctx, hw=hw)
+    t = e2e_latency(cfg, mode, 1, **kw)
+    d = c = 1.0
+    for _ in range(iters):
+        d = min(max(rate * mean_out * t, 1.0), float(max_decode_tokens))
+        c = min(max(rate * mean_in * t, 1.0), float(max_chunk_tokens))
+        if packed:
+            t_new = e2e_latency(cfg, mode, int(round(d + c)), **kw)
+        else:
+            t_new = (e2e_latency(cfg, mode, int(round(d)), **kw)
+                     + e2e_latency(cfg, mode, int(round(c)), **kw))
+        t = 0.5 * t + 0.5 * t_new
+    return {"t_iter": t, "decode_tokens": d, "chunk_tokens": c}
+
+
+def online_summary(cfg: ModelConfig, rates: List[float], *,
+                   mean_in: int = 161, mean_out: int = 338, tp: int = 8,
+                   ctx: int = 8192, hw: Optional[HW] = None,
+                   max_decode_tokens: int = 256,
+                   max_chunk_tokens: int = 2048
+                   ) -> Dict[float, Dict[str, float]]:
+    """Weave activation and latency vs offered load, both dispatch schemes
+    — the `serve/online` analytic rows.  Per rate: the steady-state token
+    mix, whether the packed iteration / the separate halves clear the
+    split floor, and the tokenweave-vs-fuseonly iteration latencies.
+
+    The default ``max_decode_tokens`` (= engine max_batch) sits under the
+    2·tile split floor on purpose: a pure decode batch then NEVER weaves
+    under two-dispatch — exactly the vLLM serving regime the paper calls
+    out — so the mid-load window where the packed d+c clears the floor
+    while both halves sit under it is visible in the sweep."""
+    hw = hw or HW()
+    caps = dict(max_decode_tokens=max_decode_tokens,
+                max_chunk_tokens=max_chunk_tokens)
+    out: Dict[float, Dict[str, float]] = {}
+    for rate in rates:
+        pk = online_load_mix(cfg, "tokenweave", rate, mean_in=mean_in,
+                             mean_out=mean_out, tp=tp, ctx=ctx, hw=hw,
+                             packed=True, **caps)
+        two = online_load_mix(cfg, "tokenweave", rate, mean_in=mean_in,
+                              mean_out=mean_out, tp=tp, ctx=ctx, hw=hw,
+                              packed=False, **caps)
+        pk_fo = online_load_mix(cfg, "fuseonly", rate, mean_in=mean_in,
+                                mean_out=mean_out, tp=tp, ctx=ctx, hw=hw,
+                                packed=True, **caps)
+        d, c = pk["decode_tokens"], pk["chunk_tokens"]
+        d2, c2 = two["decode_tokens"], two["chunk_tokens"]
+        out[rate] = {
+            "decode_tokens": d, "chunk_tokens": c,
+            "t_iter_packed": pk["t_iter"], "t_iter_two": two["t_iter"],
+            "packed_gain": pk_fo["t_iter"] / pk["t_iter"],
+            "packed_weaves": float(
+                smart_split(int(round(d + c)), hw.tile) is not None),
+            "halves_weave": float(
+                smart_split(int(round(d2)), hw.tile) is not None
+                or smart_split(int(round(c2)), hw.tile) is not None),
+        }
+    return out
+
+
+def online_crossover_rate(cfg: ModelConfig, rates: List[float],
+                          **kw) -> Optional[float]:
+    """Lowest offered load where the packed iteration weaves but the
+    two-dispatch halves do not — the load window the online frontend
+    opens (None when no swept rate lands in it)."""
+    summary = online_summary(cfg, sorted(rates), **kw)
+    for rate in sorted(summary):
+        s = summary[rate]
+        if s["packed_weaves"] and not s["halves_weave"]:
+            return rate
+    return None
+
+
 def packed_summary(cfg: ModelConfig, decode_tokens: int, chunk_tokens: int,
                    *, tp: int = 8, ctx: int = 8192,
                    hw: Optional[HW] = None) -> Dict[str, float]:

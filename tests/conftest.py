@@ -47,3 +47,59 @@ def tiny_pcfg():
     from repro.configs.base import ParallelConfig
     return ParallelConfig(tokenweave=True, comm_mode="fused", remat=False,
                           split_unit=16, tokenweave_min_tokens=32)
+
+
+@pytest.fixture(scope="session")
+def model_builder(tiny_pcfg):
+    """Session-memoized ``(cfg[, pcfg, tp]) -> (api, params)``: the tiny
+    models test modules used to rebuild per test are built ONCE and shared
+    (params are never mutated — engines only read them)."""
+    import jax
+    from repro.models.build import build_model
+
+    cache = {}
+
+    def build(cfg, pcfg=None, tp=1):
+        key = (repr(cfg), repr(pcfg), tp)
+        if key not in cache:
+            api = build_model(cfg, pcfg if pcfg is not None else tiny_pcfg,
+                              tp=tp)
+            cache[key] = (api, api.init(jax.random.PRNGKey(0)))
+        return cache[key]
+
+    return build
+
+
+@pytest.fixture(scope="session")
+def tiny_model(mesh11, tiny_cfg, model_builder):
+    """The standard tiny dense transformer: ``(api, mesh, params)`` —
+    the shape every engine test wants."""
+    api, params = model_builder(tiny_cfg)
+    return api, mesh11, params
+
+
+@pytest.fixture(scope="session")
+def tiny_engine_builder(tiny_model):
+    """Factory for tiny engines over the shared model.  Engines with the
+    same scheduler/sampling signature share a jit cache, so replaying many
+    short traces (the differential harness, lifecycle tests) compiles each
+    step shape once per configuration instead of once per engine."""
+    from repro.runtime.engine import Engine
+    from repro.runtime.scheduler import SchedulerConfig
+
+    jit_caches = {}
+
+    def build(*, draft=None, seed=0, temperature=0.0, top_k=0, top_p=1.0,
+              **scfg_kw):
+        api, mesh, params = tiny_model
+        scfg_kw.setdefault("max_batch", 4)
+        scfg_kw.setdefault("chunk_tokens", 48)
+        scfg_kw.setdefault("max_len", 128)
+        scfg_kw.setdefault("prefill_bucket", 16)
+        key = tuple(sorted(scfg_kw.items())) + (temperature, top_k, top_p)
+        cache = jit_caches.setdefault(key, {})
+        return Engine(api, mesh, params, SchedulerConfig(**scfg_kw),
+                      temperature=temperature, top_k=top_k, top_p=top_p,
+                      draft=draft, seed=seed, jit_cache=cache)
+
+    return build

@@ -1,0 +1,62 @@
+"""Unit tests for the CI benchmark-regression gate
+(scripts/check_bench.py): key-set disagreement must fail with the full
+list of missing/extra metric names, zero baselines must stay zero, and
+tolerance breaches must be reported per metric."""
+import importlib.util
+import os
+
+_SCRIPT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "scripts", "check_bench.py")
+_spec = importlib.util.spec_from_file_location("check_bench", _SCRIPT)
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+BASE = {"serve/a": 1.0, "serve/b": 0.0, "serve/c": 10.0}
+
+
+def test_agreeing_run_passes():
+    assert check_bench.run_checks(dict(BASE), BASE, tol=0.15) == []
+
+
+def test_within_tolerance_passes():
+    cur = {"serve/a": 1.1, "serve/b": 0.0, "serve/c": 9.0}
+    assert check_bench.run_checks(cur, BASE, tol=0.15) == []
+
+
+def test_missing_key_fails_and_names_it():
+    cur = {"serve/a": 1.0, "serve/b": 0.0}
+    failures = check_bench.run_checks(cur, BASE, tol=0.15)
+    assert len(failures) == 1
+    assert "MISSING" in failures[0] and "serve/c" in failures[0]
+
+
+def test_extra_key_fails_and_names_it_unless_allowed():
+    cur = dict(BASE, **{"serve/new1": 5.0, "serve/new2": 6.0})
+    failures = check_bench.run_checks(cur, BASE, tol=0.15)
+    assert len(failures) == 1
+    assert "NOT in the baseline" in failures[0]
+    assert "serve/new1" in failures[0] and "serve/new2" in failures[0]
+    assert check_bench.run_checks(cur, BASE, tol=0.15,
+                                  allow_extra=True) == []
+
+
+def test_missing_and_extra_both_reported():
+    cur = {"serve/a": 1.0, "serve/b": 0.0, "serve/d": 2.0}
+    failures = check_bench.run_checks(cur, BASE, tol=0.15)
+    assert len(failures) == 2
+    assert any("serve/c" in f for f in failures)
+    assert any("serve/d" in f for f in failures)
+
+
+def test_zero_baseline_must_stay_zero():
+    cur = {"serve/a": 1.0, "serve/b": 0.01, "serve/c": 10.0}
+    failures = check_bench.run_checks(cur, BASE, tol=0.15)
+    assert len(failures) == 1 and "serve/b" in failures[0]
+
+
+def test_tolerance_breach_reports_rel_diff():
+    cur = {"serve/a": 2.0, "serve/b": 0.0, "serve/c": 10.0}
+    failures = check_bench.run_checks(cur, BASE, tol=0.15)
+    assert len(failures) == 1
+    assert "serve/a" in failures[0] and "rel_diff" in failures[0]

@@ -2,9 +2,12 @@
 central equivalences — fused/reordered/vanilla comm_norm identity, dense
 model loss identity across comm modes and the weave, MoE partitionings vs
 the dense oracle."""
+import pytest
+
 from conftest import run_distributed
 
 
+@pytest.mark.slow
 def test_comm_norm_modes_equal():
     run_distributed("""
 import jax, jax.numpy as jnp, numpy as np
@@ -38,6 +41,7 @@ print('PASS')
 """)
 
 
+@pytest.mark.slow
 def test_dense_model_modes_and_weave_equal_tp4():
     run_distributed("""
 import dataclasses
@@ -80,6 +84,7 @@ print('PASS', losses)
 """)
 
 
+@pytest.mark.slow
 def test_moe_partitionings_match_dense_oracle():
     run_distributed("""
 import dataclasses
@@ -149,6 +154,7 @@ print('PASS')
 """)
 
 
+@pytest.mark.slow
 def test_context_parallel_decode():
     """Flash-decoding combine across a context-parallel KV cache equals the
     single-shard computation."""

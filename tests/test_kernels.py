@@ -56,6 +56,7 @@ def test_flash_attention_matches_oracle(b, sq, sk, kvh, g, dh, causal,
     np.testing.assert_allclose(o, jnp.stack(refs), rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n,t,d", [(4, 16, 32), (8, 32, 64), (2, 8, 128)])
 def test_ring_ar_rmsnorm_multidevice(n, t, d, tmp_path):
     """The paper's fused AllReduce-RMSNorm kernel, validated on n simulated

@@ -19,7 +19,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ModelConfig
 from repro.models.build import build_model
 from repro.runtime.engine import Engine
 from repro.runtime.requests import Request, repetitive_trace
@@ -47,10 +47,9 @@ def _run(api, mesh, params, prompts, *, packed, n_new=6, draft=None,
 
 
 @pytest.fixture(scope="module")
-def tiny(mesh11, tiny_cfg, tiny_pcfg):
-    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
-    return api, mesh11, params
+def tiny(tiny_model):
+    """Alias of the shared session-scoped tiny model (conftest.py)."""
+    return tiny_model
 
 
 # --------------------------------------------------------------------------

@@ -1,12 +1,10 @@
 """Paged KV-cache subsystem: allocator invariants, prefix-cache hits,
 copy-on-write, LRU eviction, preemption round-trips, and end-to-end
 token-identity of the paged engine vs. the legacy slot engine."""
-import jax
 import numpy as np
 import pytest
 
-from repro.configs.base import ModelConfig, ParallelConfig
-from repro.models.build import build_model
+from repro.configs.base import ModelConfig
 from repro.runtime.engine import Engine
 from repro.runtime.paging import BlockAllocator, BlockManager
 from repro.runtime.prefix_cache import PrefixCache, chain_hashes
@@ -161,19 +159,13 @@ def test_request_preemption_bookkeeping():
 # end-to-end: paged engine vs legacy slot engine (greedy, token-identical)
 # ==========================================================================
 
-PCFG = ParallelConfig(tokenweave=True, comm_mode="fused", remat=False,
-                      split_unit=16, tokenweave_min_tokens=32)
+# the tiny dense model + parallel config now live in conftest.py
+# (tiny_cfg / tiny_pcfg / model_builder): built once per session, shared
+# with test_packed.py / test_spec.py / test_differential.py
 
 
-def _dense_cfg():
-    return ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
-                       num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
-                       vocab_size=128, dtype="float32")
-
-
-def _run_engine(cfg, mesh, prompts, n_new=6, **scfg_kw):
-    api = build_model(cfg, PCFG, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+def _run_engine(model, mesh, prompts, n_new=6, **scfg_kw):
+    api, params = model
     kw = dict(max_batch=4, chunk_tokens=32, max_len=128, prefill_bucket=16,
               block_size=16)
     kw.update(scfg_kw)
@@ -186,9 +178,10 @@ def _run_engine(cfg, mesh, prompts, n_new=6, **scfg_kw):
 
 
 @pytest.mark.parametrize("family", ["dense", "sliding", "moe"])
-def test_paged_engine_token_identical(family, mesh11):
+def test_paged_engine_token_identical(family, mesh11, tiny_cfg,
+                                      model_builder):
     if family == "dense":
-        cfg = _dense_cfg()
+        cfg = tiny_cfg
     elif family == "sliding":
         cfg = ModelConfig(name="t", family="dense", num_layers=3, d_model=64,
                           num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
@@ -202,21 +195,22 @@ def test_paged_engine_token_identical(family, mesh11):
                           dtype="float32")
     rng = np.random.RandomState(0)
     prompts = [list(rng.randint(0, 128, size=n)) for n in (23, 57, 40)]
-    ref, _ = _run_engine(cfg, mesh11, prompts, paged=False)
-    got, eng = _run_engine(cfg, mesh11, prompts, paged=True)
+    model = model_builder(cfg)
+    ref, _ = _run_engine(model, mesh11, prompts, paged=False)
+    got, eng = _run_engine(model, mesh11, prompts, paged=True)
     assert got == ref, (family, got, ref)
     assert not eng.block_mgr.tables                # all blocks released
 
 
-def test_prefix_cache_hit_token_identical(mesh11):
+def test_prefix_cache_hit_token_identical(mesh11, tiny_cfg, model_builder):
     """Second wave of shared-system-prompt requests must hit the prefix
     cache AND produce exactly the cold-prefill logits path's tokens."""
-    cfg = _dense_cfg()
+    model = model_builder(tiny_cfg)
     rng = np.random.RandomState(1)
     sys_p = list(rng.randint(0, 128, size=48))
     prompts = [sys_p + list(rng.randint(0, 128, size=8)) for _ in range(4)]
-    ref, _ = _run_engine(cfg, mesh11, prompts, paged=False, max_batch=2)
-    got, eng = _run_engine(cfg, mesh11, prompts, paged=True, max_batch=2)
+    ref, _ = _run_engine(model, mesh11, prompts, paged=False, max_batch=2)
+    got, eng = _run_engine(model, mesh11, prompts, paged=True, max_batch=2)
     assert got == ref
     st = eng.block_mgr.stats
     assert st.hit_tokens >= 2 * 48, st             # wave 2: both hit
@@ -226,43 +220,43 @@ def test_prefix_cache_hit_token_identical(mesh11):
         - st.hit_tokens + 2 * 16                   # + bucket padding slack
 
 
-def test_preemption_round_trip_same_output(mesh11):
+def test_preemption_round_trip_same_output(mesh11, tiny_cfg, model_builder):
     """Pool too small for all decodes: requests must be preempted
     (DECODE -> WAITING), readmitted via recompute, and still produce
     exactly the legacy engine's tokens."""
-    cfg = _dense_cfg()
+    model = model_builder(tiny_cfg)
     rng = np.random.RandomState(2)
     prompts = [list(rng.randint(0, 128, size=30)) for _ in range(4)]
-    ref, _ = _run_engine(cfg, mesh11, prompts, paged=False, n_new=10)
-    got, eng = _run_engine(cfg, mesh11, prompts, paged=True, n_new=10,
+    ref, _ = _run_engine(model, mesh11, prompts, paged=False, n_new=10)
+    got, eng = _run_engine(model, mesh11, prompts, paged=True, n_new=10,
                            num_blocks=9, prefix_caching=False)
     assert got == ref
     assert eng.block_mgr.stats.preemptions > 0
     assert max(r.preemptions for r in eng.sched.finished) > 0
 
 
-def test_eviction_under_memory_pressure_token_identical(mesh11):
+def test_eviction_under_memory_pressure_token_identical(mesh11, tiny_cfg,
+                                                        model_builder):
     """Prefix caching + a pool with no headroom: cached-free blocks must
     be evicted (LRU) without ever corrupting live requests."""
-    cfg = _dense_cfg()
+    model = model_builder(tiny_cfg)
     rng = np.random.RandomState(3)
     prompts = [list(rng.randint(0, 128, size=34)) for _ in range(5)]
-    ref, _ = _run_engine(cfg, mesh11, prompts, paged=False, n_new=8,
+    ref, _ = _run_engine(model, mesh11, prompts, paged=False, n_new=8,
                          max_batch=2)
-    got, eng = _run_engine(cfg, mesh11, prompts, paged=True, n_new=8,
+    got, eng = _run_engine(model, mesh11, prompts, paged=True, n_new=8,
                            max_batch=2, num_blocks=8)
     assert got == ref
     assert eng.block_mgr.stats.evictions > 0
 
 
-def test_context_ceiling_truncates_instead_of_overflowing(mesh11):
+def test_context_ceiling_truncates_instead_of_overflowing(mesh11, tiny_cfg,
+                                                          model_builder):
     """A request whose generation would outgrow max_len must finish with
     a truncated output, not overflow the block table; an unservable
     prompt is rejected at add_request."""
-    cfg = _dense_cfg()
     rng = np.random.RandomState(5)
-    api = build_model(cfg, PCFG, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+    api, params = model_builder(tiny_cfg)
     eng = Engine(api, mesh11, params,
                  SchedulerConfig(max_batch=2, chunk_tokens=32, max_len=64,
                                  prefill_bucket=16, paged=True,
@@ -278,13 +272,12 @@ def test_context_ceiling_truncates_instead_of_overflowing(mesh11):
                                 max_new_tokens=1))
 
 
-def test_unservable_request_is_rejected_or_raises(mesh11):
+def test_unservable_request_is_rejected_or_raises(mesh11, tiny_cfg,
+                                                  model_builder):
     """A request the pool can never hold must be rejected up front; a
     stuck queue (e.g. after preemption regrowth) must raise, not silently
     drop requests."""
-    cfg = _dense_cfg()
-    api = build_model(cfg, PCFG, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+    api, params = model_builder(tiny_cfg)
     eng = Engine(api, mesh11, params,
                  SchedulerConfig(max_batch=2, chunk_tokens=32, max_len=64,
                                  prefill_bucket=16, paged=True,
@@ -302,18 +295,17 @@ def test_unservable_request_is_rejected_or_raises(mesh11):
         eng.run()
 
 
-def test_legacy_slot_reset_on_finish(mesh11):
+def test_legacy_slot_reset_on_finish(mesh11, tiny_cfg, model_builder):
     """Regression: a finished long request's stale cache rows must not
     leak into a short request reusing its slot (Engine now resets slots
     on finish)."""
-    cfg = _dense_cfg()
     rng = np.random.RandomState(4)
     long_p = list(rng.randint(0, 128, size=60))
     short_p = list(rng.randint(0, 128, size=9))
-    api = build_model(cfg, PCFG, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+    api, params = model_builder(tiny_cfg)
     # reference: short prompt alone in a fresh engine
-    ref, _ = _run_engine(cfg, mesh11, [short_p], max_batch=1, paged=False)
+    ref, _ = _run_engine((api, params), mesh11, [short_p], max_batch=1,
+                         paged=False)
     eng = Engine(api, mesh11, params,
                  SchedulerConfig(max_batch=1, chunk_tokens=32, max_len=128,
                                  prefill_bucket=16))

@@ -2,6 +2,7 @@
 point of the call-graph walk) and collective wire-cost accounting."""
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.analysis.hlo import analyze_text
 
@@ -47,6 +48,7 @@ def test_nested_scan_multipliers():
     assert abs(flops - expected) / expected < 0.05, (flops, expected)
 
 
+@pytest.mark.slow
 def test_collective_wire_costs():
     """Per-device ring wire bytes for RS/AG/AR over an 8-way axis."""
     from conftest import run_distributed

@@ -2,6 +2,7 @@
 Gumbel-max sampler (runtime/sampler.py) against dense numpy references."""
 import jax
 import jax.numpy as jnp
+import pytest
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
@@ -83,6 +84,7 @@ def test_stochastic_sample_distribution(mesh11):
     assert set(np.flatnonzero(counts)) <= set(top)   # never off-nucleus
 
 
+@pytest.mark.slow
 def test_sharded_topk_matches_dense(mesh11):
     """top-k/top-p under real vocab sharding equals the single-shard
     reference (4 fake CPU devices, vocab split 4 ways)."""

@@ -1,0 +1,308 @@
+"""Online serving frontend (runtime/server.py, DESIGN.md §10).
+
+Lifecycle-edge coverage the offline engine cannot express: virtual-clock
+arrival/admission, streaming callbacks, cancellation mid-prefill and
+mid-verify (with full block / prefix-cache-ref release), deadline expiry
+semantics (goodput-accounting, never a failure), admission-policy
+ordering (FCFS vs EDF), and no-starvation of admitted decodes under late
+arrival floods — plus online-vs-offline token identity, the §10 pin."""
+import numpy as np
+import pytest
+
+from repro.runtime.requests import (Request, State, bursty_arrivals,
+                                    poisson_arrivals, replay_arrivals)
+from repro.runtime.scheduler import SchedulerConfig
+from repro.runtime.server import OnlineServer, ServerConfig, StepCost
+
+
+def _reqs(rng, n, in_lo=8, in_hi=30, out=4, arrival=None):
+    reqs = [Request(rid=i,
+                    prompt=list(rng.randint(0, 128,
+                                            size=rng.randint(in_lo, in_hi))),
+                    max_new_tokens=out) for i in range(n)]
+    if arrival is not None:
+        replay_arrivals(reqs, arrival)
+    return reqs
+
+
+def _leak_check(eng):
+    mgr = eng.block_mgr
+    if mgr is None:
+        return
+    assert not mgr.tables, list(mgr.tables)
+    leaked = [b for b in range(mgr.alloc.num_blocks) if mgr.alloc.ref[b]]
+    assert not leaked, leaked
+
+
+# --------------------------------------------------------------------------
+# arrival-process generators
+# --------------------------------------------------------------------------
+
+def test_arrival_generators_deterministic_and_sorted():
+    rng = np.random.RandomState(0)
+    a = poisson_arrivals(_reqs(rng, 10), rate=0.5, seed=3)
+    rng = np.random.RandomState(0)
+    b = poisson_arrivals(_reqs(rng, 10), rate=0.5, seed=3)
+    assert [r.arrival_time for r in a] == [r.arrival_time for r in b]
+    assert all(x.arrival_time <= y.arrival_time for x, y in zip(a, a[1:]))
+
+    rng = np.random.RandomState(1)
+    c = bursty_arrivals(_reqs(rng, 12), rate=5.0, burst=4, off_time=50.0,
+                        seed=9)
+    gaps = [y.arrival_time - x.arrival_time for x, y in zip(c, c[1:])]
+    # the inter-burst gaps dwarf the intra-burst ones
+    assert max(gaps) > 10 * min(gaps)
+
+    rng = np.random.RandomState(2)
+    d = replay_arrivals(_reqs(rng, 3), [5.0, 1.0, 3.0])
+    assert [r.arrival_time for r in d] == [1.0, 3.0, 5.0]
+    with pytest.raises(ValueError):
+        replay_arrivals(d, [1.0])
+
+
+# --------------------------------------------------------------------------
+# token identity + streaming
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("packed", [False, True], ids=["two", "packed"])
+def test_online_token_identical_to_offline(packed, tiny_engine_builder):
+    kw = dict(paged=True, packed=packed, block_size=16)
+    rng = np.random.RandomState(3)
+    arrivals = [0.0, 2.0, 2.5, 9.0, 11.0]
+    eng = tiny_engine_builder(**kw)
+    for r in _reqs(rng, 5, arrival=arrivals):
+        eng.add_request(r)
+    ref = {r.rid: r.output for r in eng.run()}
+    _leak_check(eng)
+
+    rng = np.random.RandomState(3)
+    eng2 = tiny_engine_builder(**kw)
+    srv = OnlineServer(eng2, ServerConfig(
+        step_cost=StepCost(base=1.0, per_token=0.02)))
+    streamed = []
+    for r in _reqs(rng, 5, arrival=arrivals):
+        srv.submit(r, on_token=lambda rq, t, at: streamed.append(
+            (rq.rid, t, at)))
+    done = srv.run()
+    got = {r.rid: r.output for r in done}
+    assert got == ref
+    _leak_check(eng2)
+    # streaming delivered every token, in per-request order, time-stamped
+    # with a nondecreasing clock
+    per_rid = {}
+    for rid, tok, at in streamed:
+        per_rid.setdefault(rid, []).append(tok)
+    assert per_rid == ref
+    times = [at for _, _, at in streamed]
+    assert times == sorted(times)
+    # TTFT/e2e recorded for every request, goodput 1 (no deadlines)
+    lat = eng2.stats.latency
+    assert len(lat.ttft) == 5 and len(lat.e2e) == 5
+    assert lat.goodput == 1.0
+    for r in done:
+        assert r.ttft is not None and r.ttft >= 0
+        assert r.e2e_latency >= (r.ttft or 0)
+
+
+# --------------------------------------------------------------------------
+# cancellation: mid-prefill and mid-verify release everything
+# --------------------------------------------------------------------------
+
+def test_cancel_mid_prefill_releases_blocks_and_prefix_refs(
+        tiny_engine_builder):
+    """A long prompt sharing a cached prefix is cancelled while still
+    PREFILL: its private blocks AND its references on prefix-cache-shared
+    blocks must be dropped (the shared blocks stay cached for others)."""
+    rng = np.random.RandomState(5)
+    shared = list(rng.randint(0, 128, size=32))
+    eng = tiny_engine_builder(paged=True, block_size=16, chunk_tokens=16,
+                              prefix_caching=True)
+    srv = OnlineServer(eng)
+    warm = Request(rid=0, prompt=shared + [1, 2], max_new_tokens=2)
+    warm.arrival_time = 0.0
+    srv.submit(warm)
+    victim = Request(rid=1, prompt=shared + list(range(3, 40)),
+                     max_new_tokens=4)
+    victim.arrival_time = 6.0
+    srv.submit(victim)
+    # chunk_tokens=16 => victim's ~37-token miss suffix needs 3 prefill
+    # steps; cancel it one step after arrival, mid-prefill
+    srv.cancel(1, at=7.5)
+    done = srv.run()
+    assert [r.rid for r in done] == [0]
+    assert victim.finish_reason == "cancelled"
+    assert victim.state == State.DONE
+    assert not victim.output                    # never reached DECODE
+    assert 0 < victim.prefill_pos < len(victim.prompt)   # truly mid-prefill
+    assert victim.prompt_hit_tokens > 0         # it DID share the prefix
+    _leak_check(eng)
+    assert eng.stats.cancelled == 1
+    # shared blocks survive in the prefix cache (cached-free, hittable)
+    assert len(eng.block_mgr.prefix) > 0
+
+
+@pytest.mark.parametrize("packed", [False, True], ids=["two", "packed"])
+def test_cancel_mid_verify_releases_blocks(packed, tiny_engine_builder):
+    """Cancellation while a spec-decode request is mid-verify (DECODE with
+    committed tokens and a γ-window in flight between steps): rollback
+    state, grown draft blocks, and the table must all release."""
+    eng = tiny_engine_builder(paged=True, packed=packed, block_size=16,
+                              spec_gamma=3, max_len=256)
+    srv = OnlineServer(eng)
+    rng = np.random.RandomState(6)
+    motif = list(rng.randint(0, 128, size=10))
+
+    # cancel rid 1 from inside its own stream after its 3rd token — the
+    # cancel lands between steps while verify windows are active
+    def on_token(rq, tok, at):
+        if len(rq.output) == 3:
+            srv.cancel(1)
+
+    for i in range(3):
+        r = Request(rid=i, prompt=motif * 3, max_new_tokens=12)
+        r.arrival_time = 0.0
+        srv.submit(r, on_token=on_token if i == 1 else None)
+    done = srv.run()
+    assert {r.rid for r in done} == {0, 2}
+    victim = srv.aborted[0]
+    assert victim.rid == 1 and victim.finish_reason == "cancelled"
+    assert 3 <= len(victim.output) < 12        # cancelled mid-generation
+    assert eng.stats.spec.verify_steps > 0     # spec path actually ran
+    for r in done:
+        assert len(r.output) == 12             # peers unaffected
+    _leak_check(eng)
+
+
+def test_cancel_before_arrival_never_reaches_engine(tiny_engine_builder):
+    eng = tiny_engine_builder(paged=True)
+    srv = OnlineServer(eng)
+    rng = np.random.RandomState(7)
+    a, b = _reqs(rng, 2, arrival=[0.0, 50.0])
+    srv.submit(a)
+    srv.submit(b)
+    srv.cancel(1, at=10.0)       # long before rid 1's arrival at t=50
+    done = srv.run()
+    assert [r.rid for r in done] == [0]
+    assert b.finish_reason == "cancelled" and b.admit_time is None
+    assert eng.stats.cancelled == 1
+    # regression: a never-arrived cancel must not poison the latency
+    # percentiles (its clock-now "finish" precedes its arrival)
+    assert len(eng.stats.latency.e2e) == 1
+    assert all(x >= 0 for x in eng.stats.latency.e2e)
+    _leak_check(eng)
+
+
+# --------------------------------------------------------------------------
+# deadlines: goodput accounting, not failures
+# --------------------------------------------------------------------------
+
+def test_deadline_expiry_counts_against_goodput_not_failure(
+        tiny_engine_builder):
+    """expire_on_deadline: a hopeless request is aborted at its deadline
+    (resources released), counted in goodput's denominator — and the run
+    completes normally; peers are untouched."""
+    eng = tiny_engine_builder(paged=True)
+    srv = OnlineServer(eng, ServerConfig(expire_on_deadline=True))
+    rng = np.random.RandomState(8)
+    reqs = _reqs(rng, 4, out=6, arrival=[0.0, 0.5, 1.0, 1.5])
+    reqs[2].deadline = reqs[2].arrival_time + 2.0     # hopeless
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run()                                  # no exception
+    assert {r.rid for r in done} == {0, 1, 3}
+    assert reqs[2].finish_reason == "expired"
+    assert not reqs[2].slo_ok
+    assert eng.stats.expired == 1 and eng.stats.cancelled == 0
+    lat = eng.stats.latency
+    assert lat.slo_total == 4 and lat.slo_met == 3
+    assert lat.goodput == pytest.approx(0.75)
+    _leak_check(eng)
+
+
+def test_deadline_late_finish_without_expiry(tiny_engine_builder):
+    """Default policy: a past-deadline request still runs to completion
+    (full output), but its slo_ok is False and goodput drops — late
+    service is an SLO miss, not a dropped request."""
+    eng = tiny_engine_builder(paged=True)
+    srv = OnlineServer(eng)     # expire_on_deadline=False
+    rng = np.random.RandomState(9)
+    reqs = _reqs(rng, 2, out=5, arrival=[0.0, 0.0])
+    reqs[1].deadline = 0.5                            # will finish late
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run()
+    assert {r.rid for r in done} == {0, 1}
+    assert len(reqs[1].output) == 5                   # served in full
+    assert reqs[1].finish_reason == "stop" and not reqs[1].slo_ok
+    assert eng.stats.expired == 0
+    assert eng.stats.latency.goodput == pytest.approx(0.5)
+    _leak_check(eng)
+
+
+# --------------------------------------------------------------------------
+# admission policy + starvation
+# --------------------------------------------------------------------------
+
+def test_edf_policy_admits_by_deadline(tiny_engine_builder):
+    """Three requests queue behind a full engine; EDF admits them in
+    deadline order (tightest first), not arrival order."""
+    rng = np.random.RandomState(10)
+    outcomes = {}
+    for policy in ("fcfs", "edf"):
+        eng = tiny_engine_builder(paged=True, max_batch=1, policy=policy)
+        srv = OnlineServer(eng)
+        blocker = Request(rid=0, prompt=list(range(8)), max_new_tokens=8)
+        blocker.arrival_time = 0.0
+        srv.submit(blocker)
+        # all three arrive while the blocker occupies the only slot
+        deadlines = {1: 200.0, 2: 50.0, 3: 100.0}
+        for rid in (1, 2, 3):
+            r = Request(rid=rid,
+                        prompt=list(rng.randint(0, 128, size=10)),
+                        max_new_tokens=2, deadline=deadlines[rid])
+            r.arrival_time = 1.0 + 0.1 * rid
+            srv.submit(r)
+        srv.run()
+        outcomes[policy] = [rid for _, rid in
+                            sorted((r.first_token_time, r.rid)
+                                   for r in srv.completed if r.rid != 0)]
+        _leak_check(eng)
+    assert outcomes["fcfs"] == [1, 2, 3]
+    assert outcomes["edf"] == [2, 3, 1]
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="admission policy"):
+        SchedulerConfig(policy="sjf")
+
+
+def test_late_arrivals_never_starve_admitted_decodes(tiny_engine_builder):
+    """An admitted decode keeps its slot and decodes every iteration no
+    matter how many later requests arrive (even tighter-deadline ones
+    under EDF): admission is slot-gated, never slot-stealing."""
+    for policy in ("fcfs", "edf"):
+        eng = tiny_engine_builder(paged=True, max_batch=2, policy=policy)
+        srv = OnlineServer(eng)
+        rng = np.random.RandomState(11)
+        early = _reqs(rng, 2, out=10, arrival=[0.0, 0.0])
+        for r in early:
+            srv.submit(r)
+        # a flood of later arrivals with aggressive deadlines
+        flood = [Request(rid=10 + i,
+                         prompt=list(rng.randint(0, 128, size=12)),
+                         max_new_tokens=2, deadline=6.0 + i)
+                 for i in range(6)]
+        for i, r in enumerate(flood):
+            r.arrival_time = 2.0 + 0.1 * i
+            srv.submit(r)
+        done = srv.run()
+        assert len(done) == 8
+        for r in early:
+            assert len(r.output) == 10          # full budget, no eviction
+            assert r.preemptions == 0
+        # the early decodes finished BEFORE the last flood request —
+        # they were never parked to make room
+        last_flood_finish = max(r.finish_time for r in flood)
+        for r in early:
+            assert r.finish_time <= last_flood_finish
+        _leak_check(eng)

@@ -45,9 +45,8 @@ def _run(api, mesh, params, prompts, *, paged, gamma, n_new=12, draft=None,
 
 @pytest.mark.parametrize("paged", [False, True], ids=["legacy", "paged"])
 def test_greedy_spec_token_identical_ngram(paged, mesh11, tiny_cfg,
-                                           tiny_pcfg):
-    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+                                           tiny_model):
+    api, _, params = tiny_model
     prompts = _prompts(tiny_cfg.vocab_size)
     _, ref = _run(api, mesh11, params, prompts, paged=paged, gamma=0)
     eng, got = _run(api, mesh11, params, prompts, paged=paged, gamma=3)
@@ -57,12 +56,11 @@ def test_greedy_spec_token_identical_ngram(paged, mesh11, tiny_cfg,
 
 
 def test_greedy_spec_token_identical_model_draft(mesh11, tiny_cfg,
-                                                 tiny_pcfg):
+                                                 tiny_model):
     """Self-draft (target model drafts for itself): acceptance must be 1.0
     and output still identical — the strongest identity check because every
     window commits gamma+1 tokens through the rollback machinery."""
-    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+    api, _, params = tiny_model
     prompts = _prompts(tiny_cfg.vocab_size)
     _, ref = _run(api, mesh11, params, prompts, paged=True, gamma=0)
     draft = SP.ModelDraft(api, mesh11, params, gamma=3, max_batch=4)
@@ -73,20 +71,19 @@ def test_greedy_spec_token_identical_model_draft(mesh11, tiny_cfg,
     assert eng.stats.spec.tokens_per_step > 2.0
 
 
-def test_spec_respects_max_new_tokens(mesh11, tiny_cfg, tiny_pcfg):
+def test_spec_respects_max_new_tokens(mesh11, tiny_cfg, tiny_model):
     """Drafting is capped so verify never overshoots max_new_tokens."""
-    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+    api, _, params = tiny_model
     draft = SP.ModelDraft(api, mesh11, params, gamma=4, max_batch=4)
     eng, got = _run(api, mesh11, params, _prompts(tiny_cfg.vocab_size),
                     paged=True, gamma=4, n_new=5, draft=draft)
     assert all(len(o) == 5 for o in got.values())
 
 
-def test_spec_rejected_on_unsupported_configs(mesh11, tiny_cfg, tiny_pcfg):
+def test_spec_rejected_on_unsupported_configs(mesh11, tiny_cfg, tiny_pcfg,
+                                              tiny_model):
     import dataclasses
-    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+    api, _, params = tiny_model
     slide = dataclasses.replace(tiny_cfg, sliding_window=16)
     api_s = build_model(slide, tiny_pcfg, tp=1)
     with pytest.raises(ValueError, match="sliding-window"):
@@ -191,13 +188,12 @@ def _assert_pool_consistent(eng):
             assert len(mgr.tables[r.rid]) >= want, (r.rid, r.length)
 
 
-def test_paged_spec_rollback_consistency(mesh11, tiny_cfg, tiny_pcfg):
+def test_paged_spec_rollback_consistency(mesh11, tiny_cfg, tiny_model):
     """Partial acceptance every step (ngram draft on low-entropy prompts)
     with a tight pool: after every engine iteration the block table, the
     refcounts, and the free/cached lists must agree; at the end all blocks
     are released."""
-    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+    api, _, params = tiny_model
     eng = Engine(api, mesh11, params,
                  SchedulerConfig(max_batch=3, chunk_tokens=48, max_len=96,
                                  prefill_bucket=16, paged=True, block_size=4,
@@ -217,12 +213,12 @@ def test_paged_spec_rollback_consistency(mesh11, tiny_cfg, tiny_pcfg):
     assert 0 < st.draft_accepted < st.draft_proposed
 
 
-def test_paged_spec_with_prefix_cache_identical(mesh11, tiny_cfg, tiny_pcfg):
+def test_paged_spec_with_prefix_cache_identical(mesh11, tiny_cfg,
+                                                tiny_model):
     """Spec decoding composes with prefix caching: shared-prefix prompts,
     outputs identical to the non-spec paged run, registered blocks
     survive truncation."""
-    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+    api, _, params = tiny_model
     base = _prompts(tiny_cfg.vocab_size, sizes=(40,))[0]
     # more requests than slots (max_batch=4): the late admissions hit the
     # blocks the early ones registered
@@ -235,12 +231,11 @@ def test_paged_spec_with_prefix_cache_identical(mesh11, tiny_cfg, tiny_pcfg):
     assert eng.block_mgr.stats.hit_tokens > 0
 
 
-def test_spec_stats_accounting(mesh11, tiny_cfg, tiny_pcfg):
+def test_spec_stats_accounting(mesh11, tiny_cfg, tiny_model):
     """All decoded tokens are accounted for: verify-committed tokens plus
     plain-decode fallback steps (iterations where nothing was drafted);
     acceptance/tokens-per-step are internally consistent."""
-    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+    api, _, params = tiny_model
     eng, got = _run(api, mesh11, params, _prompts(tiny_cfg.vocab_size),
                     paged=True, gamma=3)
     st = eng.stats.spec
@@ -253,12 +248,11 @@ def test_spec_stats_accounting(mesh11, tiny_cfg, tiny_pcfg):
     assert total_out == eng.stats.decode_tokens + len(got)
 
 
-def test_stochastic_spec_engine_reproducible(mesh11, tiny_cfg, tiny_pcfg):
+def test_stochastic_spec_engine_reproducible(mesh11, tiny_cfg, tiny_model):
     """temperature/top-k/top-p run end-to-end through prefill, fallback
     decode, AND verify (one PRNG stream, seeded): same seed => identical
     outputs, different seed => different."""
-    api = build_model(tiny_cfg, tiny_pcfg, tp=1)
-    params = api.init(jax.random.PRNGKey(0))
+    api, _, params = tiny_model
     prompts = _prompts(tiny_cfg.vocab_size, sizes=(20, 33))
 
     def run(seed):

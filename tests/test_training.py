@@ -4,9 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from conftest import run_distributed
 
 
+@pytest.mark.slow
 def test_training_paths_agree_and_converge():
     run_distributed("""
 import jax, jax.numpy as jnp, numpy as np
