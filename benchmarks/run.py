@@ -511,6 +511,163 @@ def serve_online(quick=False):
          f"halves_weave={x['halves_weave']:.0f}")
 
 
+def serve_cluster(quick=False):
+    """Cluster serving layer (runtime/cluster.py, DESIGN.md §11,
+    CPU-real): N independent engine replicas behind a pluggable router.
+
+    Part 1 — routing: a grouped shared-prefix trace through a 3-replica
+    mixed fleet under every router (round_robin, least_loaded,
+    prefix_affinity); outputs pinned token-identical to a SINGLE engine on
+    the same seeded trace for each (greedy outputs are batch-composition-
+    invariant, so where a request lands never changes what it generates);
+    prefix_affinity must actually find hot blocks (affinity hit rate > 0).
+
+    Part 2 — disaggregation: the same offered load through (a) a
+    monolithic fleet of 3 mixed replicas and (b) 2 prefill + 1 decode
+    replica with KV handoff.  Outputs pinned identical to the single
+    engine again, every request migrates exactly once, and the decode
+    fleet's merged batches must weave STRICTLY more often than the
+    monolithic fleet's (the §11 payoff: concentrated decode traffic
+    crosses ``tokenweave_min_tokens`` at loads where a monolithic
+    engine's share sits below it) — plus the sim's analytic crossover
+    row."""
+    from repro.configs.base import ModelConfig, ParallelConfig
+    from repro.models.build import build_model
+    from repro.runtime.cluster import ClusterConfig, ClusterServer, Replica
+    from repro.runtime.engine import Engine
+    from repro.runtime.requests import (grouped_prefix_trace,
+                                        poisson_arrivals,
+                                        sharegpt_like_trace)
+    from repro.runtime.scheduler import SchedulerConfig
+
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=128, dtype="float32")
+    pcfg = ParallelConfig(tokenweave=True, comm_mode="fused", remat=False,
+                          split_unit=16, tokenweave_min_tokens=48)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    api = build_model(cfg, pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+
+    jit_cache = {}
+
+    def engine(max_batch=16, chunk=64):
+        return Engine(api, mesh, params,
+                      SchedulerConfig(max_batch=max_batch,
+                                      chunk_tokens=chunk, max_len=96,
+                                      prefill_bucket=16, paged=True,
+                                      block_size=8, packed=True),
+                      jit_cache=jit_cache)
+
+    def single_ref(trace):
+        eng = engine()
+        for r in trace():
+            eng.add_request(r)
+        return {r.rid: r.output for r in eng.run()}
+
+    # ---- part 1: routers on a shared-prefix workload ------------------
+    per_group = 3 if quick else 4
+
+    def affinity_trace():
+        t = grouped_prefix_trace(3, per_group, prefix_len=24, tail_len=6,
+                                 output_len=6, vocab=cfg.vocab_size, seed=3)
+        return poisson_arrivals(t, rate=0.5, seed=5)
+
+    ref = single_ref(affinity_trace)
+    summaries = {}
+    for router in ("round_robin", "least_loaded", "prefix_affinity"):
+        reps = [Replica(f"r{i}", engine()) for i in range(3)]
+        cs = ClusterServer(reps, ClusterConfig(router=router))
+        for r in affinity_trace():
+            cs.submit(r)
+        got = {r.rid: r.output for r in cs.run()}
+        assert got == ref, f"cluster ({router}) changed outputs!"
+        cs.check_quiescent()
+        summaries[router] = cs.summary()
+    aff = summaries["prefix_affinity"]["affinity_hit_rate"]
+    assert aff > 0, "prefix_affinity never found a hot block"
+
+    # ---- part 2: disaggregated prefill/decode vs monolithic fleet -----
+    n_req, rate = (36, 8.0) if quick else (48, 8.0)
+
+    def load_trace():
+        t = sharegpt_like_trace(n_req, vocab=cfg.vocab_size, seed=11,
+                                max_in=32, max_out=32)
+        for r in t:
+            r.max_new_tokens = max(24, min(r.max_new_tokens, 32))
+        return poisson_arrivals(t, rate=rate, seed=5)
+
+    ref2 = single_ref(load_trace)
+
+    mono = [Replica(f"m{i}", engine()) for i in range(3)]
+    cs_m = ClusterServer(mono, ClusterConfig(router="round_robin"))
+    for r in load_trace():
+        cs_m.submit(r)
+    assert {r.rid: r.output for r in cs_m.run()} == ref2, \
+        "monolithic fleet changed outputs!"
+    cs_m.check_quiescent()
+    mono_fwd = sum(r.engine.stats.forwards for r in mono)
+    mono_weave = (sum(r.engine.stats.weave_forwards for r in mono)
+                  / max(mono_fwd, 1))
+
+    disagg = [Replica("p0", engine(), role="prefill"),
+              Replica("p1", engine(), role="prefill"),
+              Replica("d0", engine(max_batch=48), role="decode")]
+    t0 = time.perf_counter()
+    cs_d = ClusterServer(disagg, ClusterConfig(router="round_robin"))
+    for r in load_trace():
+        cs_d.submit(r)
+    assert {r.rid: r.output for r in cs_d.run()} == ref2, \
+        "disaggregated cluster changed outputs!"
+    dt = time.perf_counter() - t0
+    cs_d.check_quiescent()
+    sd = cs_d.summary()
+    d0 = disagg[2].engine.stats
+    assert sd["migrations"] == n_req, \
+        f"expected {n_req} migrations, got {sd['migrations']}"
+    assert sd["decode_fleet/weave_rate"] > mono_weave, (
+        f"decode-fleet weave rate {sd['decode_fleet/weave_rate']:.2f} not "
+        f"above the monolithic fleet's {mono_weave:.2f}")
+    assert d0.max_forward_tokens >= pcfg.tokenweave_min_tokens - 16, (
+        "decode-fleet crossover must be carried by merged real decode "
+        "batches")
+    steps = sum(r.engine.stats.steps for r in disagg)
+    _row("serve/cluster", dt * 1e6 / max(steps, 1),
+         f"affinity_hit_rate={aff:.2f} migrations={int(sd['migrations'])} "
+         f"decode_fleet_weave={sd['decode_fleet/weave_rate']:.2f} "
+         f"mono_fleet_weave={mono_weave:.2f} "
+         f"d0_tokens_per_forward={d0.tokens_per_forward:.1f} "
+         f"import_shared_blocks="
+         f"{disagg[2].engine.block_mgr.stats.import_shared_blocks} "
+         f"outputs_identical=True")
+    _metric("serve/cluster/affinity_hit_rate", aff)
+    _metric("serve/cluster/migrations", sd["migrations"])
+    _metric("serve/cluster/mono_fleet_weave_rate", mono_weave)
+    _metric("serve/cluster/decode_fleet_weave_rate",
+            sd["decode_fleet/weave_rate"])
+    _metric("serve/cluster/p0_weave_rate", sd["p0/weave_rate"])
+    _metric("serve/cluster/p1_weave_rate", sd["p1/weave_rate"])
+    _metric("serve/cluster/d0_tokens_per_forward", d0.tokens_per_forward)
+
+    # analytic (sim cluster mode): the total-offered-load window where the
+    # disaggregated decode fleet's merged batches weave while a monolithic
+    # engine's 1/N share of the same traffic sits under the split floor
+    from repro.configs import get_config
+    from repro.sim.overlap_sim import cluster_crossover_rate, cluster_summary
+    big = get_config("llama3.3-70b")
+    rates = [10.0, 20.0, 30.0, 40.0, 60.0, 80.0]
+    summ = cluster_summary(big, rates, n_replicas=4, tp=16)
+    cross = cluster_crossover_rate(big, rates, 4, tp=16)
+    x = summ[cross] if cross is not None else summ[rates[-1]]
+    _row("serve/cluster/sim_fleet4", x["t_iter_decode_fleet"] * 1e6,
+         f"crossover_rate={cross} "
+         f"decode_fleet_tokens={x['decode_fleet_tokens']:.0f} "
+         f"mono_iter_tokens={x['mono_iter_tokens']:.0f} "
+         f"decode_fleet_gain={x['decode_fleet_gain']:.3f} "
+         f"mono_weaves={x['mono_weaves']:.0f}")
+
+
 def fig14_overlap_comparison(quick=False):
     """Paper Fig.14 analogue: TokenWeave vs a TileLink-style GEMM-fused
     overlap (which can only hide comm inside GEMMs and pays split RS/AG)."""
@@ -578,7 +735,8 @@ def kernels_micro(quick=False):
 FIGS = [fig1_comm_overhead, fig4_fused_kernel, fig9_smart_split,
         fig11_latency, fig12_throughput, fig12_engine_cpu,
         serve_prefix_cache, serve_spec_decode, serve_packed, serve_online,
-        fig14_overlap_comparison, fig16_ablation, kernels_micro]
+        serve_cluster, fig14_overlap_comparison, fig16_ablation,
+        kernels_micro]
 
 
 def _select_figs(only: str | None):
@@ -605,7 +763,11 @@ def _select_figs(only: str | None):
 
 
 def main() -> None:
-    p = argparse.ArgumentParser()
+    p = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog="Scenario-by-scenario docs and the semantics of every "
+               "gated metric: benchmarks/README.md.  Baseline update "
+               "workflow: README.md (top level).")
     p.add_argument("--quick", action="store_true")
     p.add_argument("--only", default=None,
                    help="comma-separated section names (substring match); "

@@ -74,7 +74,11 @@ def run_checks(cur: dict, base: dict, tol: float,
 
 
 def main() -> None:
-    p = argparse.ArgumentParser()
+    p = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog="Metric semantics (deterministic counters vs ±tol values) "
+               "and scenario docs: benchmarks/README.md.  Baseline update "
+               "workflow: README.md (top level).")
     p.add_argument("current", help="metrics JSON from benchmarks.run --json")
     p.add_argument("--baseline", default="benchmarks/baseline.json")
     p.add_argument("--tol", type=float, default=0.15,

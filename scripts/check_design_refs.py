@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""DESIGN.md §-reference gate (CI `lint` job).
+
+Source docstrings cite the design doc as ``DESIGN.md §N`` (see the module
+map in the top-level README).  This script keeps those citations honest:
+
+1. **Resolution** — every ``DESIGN.md §N`` citation in a Python file under
+   the scanned roots must resolve to a real ``## §N`` heading in
+   DESIGN.md.  (Bare ``§N`` without the ``DESIGN.md`` qualifier is NOT
+   checked: the code also cites *paper* sections, e.g. "paper §3.1".)
+2. **Coverage** — every module under ``src/repro/runtime/`` and
+   ``src/repro/core/`` must have a module-level docstring containing at
+   least one ``DESIGN.md §N`` citation, so the module map stays complete
+   as the runtime grows.
+
+    python scripts/check_design_refs.py [--root .]
+
+Exit 0 when clean; exit 1 listing every violation as ``path:line: msg``.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from pathlib import Path
+
+HEADING_RE = re.compile(r"^##\s+§(\d+)\b", re.MULTILINE)
+CITE_RE = re.compile(r"DESIGN(?:\.md)?\s+§(\d+)\b")
+
+# roots scanned for citation *resolution* (anything citing DESIGN.md)
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
+# packages whose every module must *carry* a citation (coverage rule)
+COVERED_PACKAGES = ("src/repro/runtime", "src/repro/core")
+
+
+def parse_headings(design_text: str) -> set:
+    """Section numbers with a real ``## §N`` heading in DESIGN.md."""
+    return {int(m) for m in HEADING_RE.findall(design_text)}
+
+
+def find_citations(text: str):
+    """All ``DESIGN.md §N`` citations as (line_number, section) pairs.
+
+    Scans the WHOLE text, not line by line: ``\\s+`` in the pattern spans
+    newlines, so a citation wrapped across a line break (normal docstring
+    wrapping) is still found — and therefore still resolution-checked,
+    with the same regex semantics the coverage rule uses."""
+    return [(text.count("\n", 0, m.start()) + 1, int(m.group(1)))
+            for m in CITE_RE.finditer(text)]
+
+
+def module_docstring_cites(text: str) -> bool:
+    """True when the module-level docstring carries a DESIGN.md §N cite."""
+    try:
+        doc = ast.get_docstring(ast.parse(text))
+    except SyntaxError:
+        return False
+    return bool(doc and CITE_RE.search(doc))
+
+
+def check(root: Path) -> list:
+    """All violations under ``root`` as ``path:line: message`` strings."""
+    failures = []
+    design = root / "DESIGN.md"
+    if not design.is_file():
+        return [f"{design}: DESIGN.md not found"]
+    sections = parse_headings(design.read_text())
+    if not sections:
+        return [f"{design}:1: no '## §N' headings found"]
+
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root)
+            text = path.read_text()
+            for line, n in find_citations(text):
+                if n not in sections:
+                    failures.append(
+                        f"{rel}:{line}: cites DESIGN.md §{n}, but DESIGN.md "
+                        f"has no '## §{n}' heading (sections: "
+                        f"{', '.join(str(s) for s in sorted(sections))})")
+
+    for pkg in COVERED_PACKAGES:
+        base = root / pkg
+        if not base.is_dir():
+            failures.append(f"{pkg}: covered package missing")
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root)
+            if not module_docstring_cites(path.read_text()):
+                failures.append(
+                    f"{rel}:1: module docstring must cite its design "
+                    f"section ('DESIGN.md §N') — see the README module map")
+    return failures
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog="Module <-> section map: README.md; design doc: DESIGN.md.")
+    p.add_argument("--root", default=".", help="repo root (default: cwd)")
+    args = p.parse_args()
+    failures = check(Path(args.root))
+    if failures:
+        print(f"{len(failures)} design-reference violation(s):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("all DESIGN.md § citations resolve; runtime/ and core/ modules "
+          "all carry one")
+
+
+if __name__ == "__main__":
+    main()

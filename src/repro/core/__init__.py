@@ -1,3 +1,4 @@
-# TokenWeave's primary contribution: wave-aware token splitting, the fused
-# AllReduce-RMSNorm collective, and the two-split overlap weave.
+"""TokenWeave's primary contribution (DESIGN.md §2): wave-aware token
+splitting, the fused AllReduce-RMSNorm collective, and the two-split
+overlap weave."""
 from repro.core.splitting import smart_split, split_sizes_for_batch  # noqa: F401

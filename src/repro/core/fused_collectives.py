@@ -1,4 +1,5 @@
-"""The paper's core op: AllReduce + residual-add + RMSNorm, four ways.
+"""The paper's core op (DESIGN.md §2): AllReduce + residual-add + RMSNorm,
+four ways.
 
 All variants run inside ``jax.shard_map`` with manual collectives so the
 collective schedule is explicit (the paper's point). Shapes (per dp shard):

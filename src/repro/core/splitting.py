@@ -1,4 +1,5 @@
-"""Wave-aware Token-Splitting (paper §3.1).
+"""Wave-aware Token-Splitting (paper §3.1; DESIGN.md §2, packed-axis
+split decision in DESIGN.md §6).
 
 The GPU notion of a "wave" (gridDim CTAs / 132 SMs) maps on TPU to the tile
 quantization of the token dimension: XLA/Mosaic process the M-dimension of a

@@ -1,0 +1,477 @@
+"""Cluster serving layer (DESIGN.md §11): multi-engine routing with
+prefix-affinity and disaggregated prefill/decode KV handoff.
+
+``ClusterServer`` fronts N independent ``Engine`` replicas — each with its
+own block pool, prefix cache, and scheduler — behind a pluggable router:
+
+* ``round_robin``       — cycle through the fleet (the stateless baseline).
+* ``least_loaded``      — fewest queued tokens on the virtual clock
+                          (remaining prefill + remaining decode budget of
+                          everything the replica owns).
+* ``prefix_affinity``   — route by the same blake2b chain keys the prefix
+                          cache computes (prefix_cache.py), so shared-
+                          prompt traffic lands on the replica whose blocks
+                          are already hot; ties fall back to least-loaded.
+
+A router is any callable ``route(cluster, req, candidates, t) -> Replica``
+that depends only on replica state at virtual time ``t`` (the contract
+DESIGN.md §11 documents); the names above resolve through ``ROUTERS``.
+
+**Disaggregated mode** (replicas carry roles): external arrivals are
+routed over the *prefill* fleet; once a request's chunked prefill
+completes (its first token sampled), the engine parks it
+(``Engine._park_for_handoff``) and the cluster migrates its KV to a
+*decode* replica — ``BlockManager.export_blocks`` / ``import_blocks`` move
+the block table and payload with refcounts correct on both sides, and the
+prefix-cache entries are re-registered on the importer (full-block hits on
+the importer are shared instead of copied).  The handoff takes virtual
+time (``MigrationCost``), modeled as an internal arrival at the decode
+replica.  The payoff: the decode fleet concentrates the whole load's
+decode traffic on a few replicas, so its merged batches cross the
+TokenWeave weave floor (``tokenweave_min_tokens``) at offered loads where
+each engine of an equal-size monolithic fleet sits below it — quantified
+analytically by ``sim/overlap_sim.cluster_summary`` and CPU-real by the
+`serve/cluster` benchmark.
+
+**Determinism.**  Time is the same virtual clock as runtime/server.py
+(§10): per-replica clocks advance by ``StepCost`` per engine step, and the
+cluster executes one global event order — the earliest of (cancel, route,
+replica step), replicas tied on time by index.  Routing at time t happens
+only once no replica has work strictly before t, so router inputs are
+replayable state; with greedy sampling the emitted tokens are
+batch-composition-invariant, so cluster outputs are token-identical to a
+single engine on the same trace for EVERY router (pinned by
+tests/test_cluster.py and the `serve/cluster` benchmark).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.runtime.engine import Engine, Handoff
+from repro.runtime.prefix_cache import chain_hashes
+from repro.runtime.requests import Request, State
+from repro.runtime.server import StepCost
+
+
+@dataclasses.dataclass
+class MigrationCost:
+    """Virtual duration of one prefill->decode KV handoff.  The default is
+    one tick flat; ``per_token`` models payload-proportional transfer time
+    (NVLink/ICI copy in a real deployment).  A documented simplification
+    (DESIGN.md §11): the cost is pure latency — it never occupies either
+    replica's compute stream."""
+    base: float = 1.0
+    per_token: float = 0.0
+
+    def of(self, n_tokens: int) -> float:
+        return self.base + self.per_token * n_tokens
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    router: object = "round_robin"    # name in ROUTERS, or a callable
+    step_cost: StepCost = dataclasses.field(default_factory=StepCost)
+    migration_cost: MigrationCost = dataclasses.field(
+        default_factory=MigrationCost)
+    max_steps: int = 1_000_000        # total engine steps across the fleet
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    migrations_started: int = 0       # handoffs dispatched onto the wire
+    affinity_routed: int = 0          # prefix_affinity routing decisions
+    affinity_hits: int = 0            # ... that found >= 1 hot block
+    cancelled: int = 0
+
+    @property
+    def affinity_hit_rate(self) -> float:
+        return (self.affinity_hits / self.affinity_routed
+                if self.affinity_routed else 0.0)
+
+
+class Replica:
+    """One engine plus its virtual clock and event queues.  Replicas model
+    independent machines sharing nothing but the wall-clock axis: routed
+    arrivals and migrations enter through time-stamped queues, and
+    ``tick`` admits whatever is due before running one engine step."""
+
+    def __init__(self, name: str, engine: Engine, role: str = "mixed",
+                 step_cost: Optional[StepCost] = None):
+        if role not in ("mixed", "prefill", "decode"):
+            raise ValueError(f"unknown replica role {role!r}")
+        self.name = name
+        self.engine = engine
+        self.role = role
+        # an explicit per-replica cost (heterogeneous fleet) wins over the
+        # cluster-wide default; None is filled in by ClusterServer
+        self.step_cost = step_cost
+        self.clock = 0.0
+        self._pending: List[Tuple[float, int, Request]] = []   # arrivals
+        self._adopt: List[Tuple[float, int, Handoff]] = []     # migrations
+        self._finished_cursor = 0
+
+    # ---- event ingress ---------------------------------------------------
+    def submit(self, req: Request, at: float) -> None:
+        bisect.insort(self._pending, (at, req.rid, req))
+
+    def queue_adoption(self, at: float, handoff: Handoff) -> None:
+        bisect.insort(self._adopt, (at, handoff.req.rid, handoff))
+
+    # ---- scheduling ------------------------------------------------------
+    def next_work_time(self) -> Optional[float]:
+        """Earliest virtual time this replica can make progress: now if the
+        engine holds any request, else its next queued arrival/adoption,
+        else None (quiescent)."""
+        if (self.engine.sched.waiting
+                or any(r is not None for r in self.engine.sched.active)):
+            return self.clock
+        times = []
+        if self._pending:
+            times.append(self._pending[0][0])
+        if self._adopt:
+            times.append(self._adopt[0][0])
+        return min(times) if times else None
+
+    def _admit_due(self) -> None:
+        while self._pending and self._pending[0][0] <= self.clock:
+            _, _, req = self._pending.pop(0)
+            req.admit_time = self.clock
+            self.engine.add_request(req)
+        # adoptions are head-of-line like paged admission: if the oldest
+        # migrated request cannot land (no slot / no blocks), younger ones
+        # wait behind it — no reordering, no starvation
+        while self._adopt and self._adopt[0][0] <= self.clock:
+            _, _, h = self._adopt[0]
+            if not self.engine.adopt_request(h.req, h.n_tokens, h.payload):
+                break
+            self._adopt.pop(0)
+
+    def tick(self) -> bool:
+        """Admit due events, run ONE engine step, advance the clock by its
+        cost.  Returns False when the engine made no progress."""
+        self._admit_due()
+        before = self.engine.stats.forward_tokens
+        if not self.engine.step():
+            return False
+        if self.step_cost is None:          # standalone use, no cluster
+            self.step_cost = StepCost()
+        self.clock += self.step_cost.of(
+            self.engine.stats.forward_tokens - before)
+        return True
+
+    def take_new_finished(self) -> List[Request]:
+        fin = self.engine.sched.finished
+        out = fin[self._finished_cursor:]
+        self._finished_cursor = len(fin)
+        return out
+
+    # ---- router inputs ---------------------------------------------------
+    def load(self) -> int:
+        """Queued tokens at the current virtual clock: remaining prefill
+        plus remaining decode budget of every request this replica owns in
+        any pre-terminal stage (queued arrival, in-flight adoption,
+        waiting, active)."""
+        reqs = ([r for _, _, r in self._pending]
+                + [h.req for _, _, h in self._adopt]
+                + list(self.engine.sched.waiting)
+                + [r for r in self.engine.sched.active if r is not None])
+        return sum(max(len(r.context_tokens) - r.prefill_pos, 0)
+                   + max(r.max_new_tokens - len(r.output), 0)
+                   for r in reqs)
+
+    def prefix_hit_blocks(self, hashes: Sequence[int]) -> int:
+        """Leading full-block prefix hits this replica's cache would serve
+        a prompt with the given chain hashes (0 on legacy-slot engines)."""
+        mgr = self.engine.block_mgr
+        if mgr is None or not mgr.prefix_caching:
+            return 0
+        return len(mgr.prefix.match(hashes))
+
+
+# --------------------------------------------------------------------------
+# routers — route(cluster, req, candidates, t) -> Replica.  Pure functions
+# of replica state at virtual time t (the §11 router contract); the sort
+# keys make every tie-break explicit and deterministic.
+# --------------------------------------------------------------------------
+
+def route_round_robin(cluster: "ClusterServer", req: Request,
+                      cands: List[Replica], t: float) -> Replica:
+    key = tuple(c.name for c in cands)
+    i = cluster._rr.get(key, 0)
+    cluster._rr[key] = i + 1
+    return cands[i % len(cands)]
+
+
+def route_least_loaded(cluster: "ClusterServer", req: Request,
+                       cands: List[Replica], t: float) -> Replica:
+    return min(enumerate(cands), key=lambda ic: (ic[1].load(), ic[0]))[1]
+
+
+def route_prefix_affinity(cluster: "ClusterServer", req: Request,
+                          cands: List[Replica], t: float) -> Replica:
+    """Most leading prompt blocks already hot wins; ties (including the
+    cold 0-hit case) fall back to least-loaded, then fleet order."""
+    bs = cluster._block_size(cands)
+    hashes = chain_hashes(req.prompt, bs)
+    hits = [c.prefix_hit_blocks(hashes) for c in cands]
+    best = max(hits)
+    cluster.stats.affinity_routed += 1
+    if best > 0:
+        cluster.stats.affinity_hits += 1
+    pool = [(i, c) for i, c in enumerate(cands) if hits[i] == best]
+    return min(pool, key=lambda ic: (ic[1].load(), ic[0]))[1]
+
+
+ROUTERS: Dict[str, Callable] = {
+    "round_robin": route_round_robin,
+    "least_loaded": route_least_loaded,
+    "prefix_affinity": route_prefix_affinity,
+}
+
+
+class ClusterServer:
+    """Deterministic multi-replica serving loop.  Usage::
+
+        reps = [Replica(f"r{i}", engine_i) for i in range(3)]
+        cs = ClusterServer(reps, ClusterConfig(router="prefix_affinity"))
+        for r in poisson_arrivals(trace, rate=0.5, seed=0):
+            cs.submit(r)
+        done = cs.run()
+        cs.summary()     # per-replica weave rates, migrations, affinity
+
+    Disaggregated mode is enabled by replica roles: with any
+    ``prefill``/``decode`` replicas present, arrivals enter through the
+    prefill fleet (``handoff_after_prefill`` set) and completed prefills
+    migrate to the decode fleet under the same router policy."""
+
+    def __init__(self, replicas: List[Replica],
+                 cfg: Optional[ClusterConfig] = None):
+        if not replicas:
+            raise ValueError("a cluster needs at least one replica")
+        names = [r.name for r in replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate replica names: {names}")
+        self.replicas = replicas
+        self.cfg = cfg or ClusterConfig()
+        self.router = (self.cfg.router if callable(self.cfg.router)
+                       else ROUTERS[self.cfg.router])
+        for rep in replicas:
+            if rep.step_cost is None:
+                rep.step_cost = self.cfg.step_cost
+
+        prefill = [r for r in replicas if r.role == "prefill"]
+        decode = [r for r in replicas if r.role == "decode"]
+        mixed = [r for r in replicas if r.role == "mixed"]
+        self.disaggregated = bool(prefill or decode)
+        if self.disaggregated:
+            if not (prefill and decode):
+                raise ValueError("disaggregated mode needs at least one "
+                                 "prefill AND one decode replica")
+            if mixed:
+                raise ValueError("mixed replicas cannot join a "
+                                 "disaggregated fleet")
+            for rep in prefill + decode:
+                if not rep.engine.paged:
+                    raise ValueError(
+                        f"replica {rep.name!r}: KV handoff requires the "
+                        f"paged backend on every replica")
+            self.ingress = prefill
+            self.decode_fleet = decode
+        else:
+            self.ingress = mixed
+            self.decode_fleet = []
+
+        self.stats = ClusterStats()
+        self.requests: List[Request] = []
+        self.completed: List[Request] = []
+        self.aborted: List[Request] = []
+        self.placement: Dict[int, str] = {}   # rid -> ingress replica name
+        self._arrivals: List[Tuple[float, int, Request]] = []
+        self._cancels: List[Tuple[float, int]] = []
+        self._by_rid: Dict[int, Request] = {}
+        self._rr: Dict[Tuple[str, ...], int] = {}
+
+    # ------------------------------------------------------------------
+    # client API
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.rid in self._by_rid:
+            raise ValueError(f"duplicate rid {req.rid}")
+        self.requests.append(req)
+        self._by_rid[req.rid] = req
+        bisect.insort(self._arrivals, (req.arrival_time, req.rid, req))
+
+    def cancel(self, rid: int, at: Optional[float] = None) -> None:
+        """Schedule a client disconnect at virtual time ``at`` — honored
+        wherever the request then lives: unrouted, queued at a replica,
+        admitted (``Engine.abort`` releases slot/blocks/prefix refs), or
+        mid-migration (the handoff is dropped; the exporter already
+        released everything at park, the importer never allocated)."""
+        if rid not in self._by_rid:
+            raise ValueError(f"unknown rid {rid}")
+        t = self._by_rid[rid].arrival_time if at is None else at
+        bisect.insort(self._cancels, (t, rid))
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+    def _block_size(self, cands: List[Replica]) -> int:
+        sizes = {c.engine.scfg.block_size for c in cands
+                 if c.engine.block_mgr is not None}
+        if not sizes:
+            raise ValueError("prefix_affinity needs paged replicas")
+        if len(sizes) != 1:
+            raise ValueError(f"prefix_affinity needs one fleet-wide "
+                             f"block_size, got {sorted(sizes)}")
+        return sizes.pop()
+
+    def _route_arrival(self) -> None:
+        t, _, req = self._arrivals.pop(0)
+        target = self.router(self, req, self.ingress, t)
+        self.placement[req.rid] = target.name
+        if self.disaggregated:
+            req.handoff_after_prefill = True
+        target.submit(req, at=t)
+
+    def _dispatch_handoffs(self, rep: Replica) -> None:
+        for h in rep.engine.take_handoffs():
+            self.stats.migrations_started += 1
+            target = self.router(self, h.req, self.decode_fleet, rep.clock)
+            at = rep.clock + self.cfg.migration_cost.of(h.n_tokens)
+            target.queue_adoption(at, h)
+
+    def _collect_finished(self, rep: Replica) -> None:
+        for req in rep.take_new_finished():
+            req.finish_time = rep.clock
+            self.completed.append(req)
+
+    def _process_cancel(self) -> None:
+        _, rid = self._cancels.pop(0)
+        req = self._by_rid[rid]
+        if req.state == State.DONE:
+            return
+        # 1. not yet routed
+        for i, (_, r_rid, _) in enumerate(self._arrivals):
+            if r_rid == rid:
+                self._arrivals.pop(i)
+                self._mark_cancelled(req)
+                return
+        for rep in self.replicas:
+            # 2. routed but not yet admitted
+            for i, (_, p_rid, _) in enumerate(rep._pending):
+                if p_rid == rid:
+                    rep._pending.pop(i)
+                    self._mark_cancelled(req)
+                    return
+            # 3. mid-migration: exporter freed at park, importer never
+            #    allocated — dropping the handoff releases everything
+            for i, (_, a_rid, _) in enumerate(rep._adopt):
+                if a_rid == rid:
+                    rep._adopt.pop(i)
+                    self._mark_cancelled(req)
+                    return
+            # 4. owned by a replica engine (waiting or active)
+            sched = rep.engine.sched
+            if req in sched.waiting or any(r is req for r in sched.active):
+                rep.engine.abort(req, "cancelled")
+                req.finish_time = rep.clock
+                self.stats.cancelled += 1
+                self.aborted.append(req)
+                return
+        raise AssertionError(f"rid {rid} not found anywhere in the cluster")
+
+    def _mark_cancelled(self, req: Request) -> None:
+        req.state = State.DONE
+        req.finish_reason = "cancelled"
+        self.stats.cancelled += 1
+        self.aborted.append(req)
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+    def run(self) -> List[Request]:
+        """Serve until every submitted request reached a terminal state.
+        One global deterministic event order: the earliest of (cancel,
+        route, replica step); at equal times cancels run first, then
+        routing, then the lowest-index replica steps."""
+        steps = 0
+        while True:
+            t_cancel = self._cancels[0][0] if self._cancels else None
+            t_route = self._arrivals[0][0] if self._arrivals else None
+            work = [(w, i) for i, rep in enumerate(self.replicas)
+                    if (w := rep.next_work_time()) is not None]
+            t_work = min(work)[0] if work else None
+            times = [t for t in (t_cancel, t_route, t_work) if t is not None]
+            if not times:
+                break
+            t = min(times)
+            if t_cancel is not None and t_cancel <= t:
+                self._process_cancel()
+                continue
+            if t_route is not None and t_route <= t:
+                self._route_arrival()
+                continue
+            _, i = min(w for w in work if w[0] <= t)
+            rep = self.replicas[i]
+            rep.clock = max(rep.clock, t)
+            if rep.tick():
+                steps += 1
+                if steps > self.cfg.max_steps:
+                    raise RuntimeError(
+                        f"cluster exceeded max_steps={self.cfg.max_steps}")
+                self._dispatch_handoffs(rep)
+                self._collect_finished(rep)
+                continue
+            # replica had work on paper but the engine made no progress:
+            # nothing else in the cluster can unblock it (pools are
+            # per-replica), so surface it like Engine.run does
+            stuck = [r.rid for r in rep.engine.sched.waiting]
+            stuck += [h.req.rid for _, _, h in rep._adopt]
+            raise RuntimeError(
+                f"replica {rep.name!r} idle with unservable request(s) "
+                f"{stuck}: block pool or slots too small")
+        return self.completed
+
+    # ------------------------------------------------------------------
+    # metrics
+    # ------------------------------------------------------------------
+    def check_quiescent(self) -> None:
+        """End-of-trace invariant sweep (tests + fault injection lean on
+        this): every block table released and every refcount back to zero
+        on every replica — a leaking ``import_blocks``/``free_request`` is
+        caught here, not silently absorbed."""
+        for rep in self.replicas:
+            mgr = rep.engine.block_mgr
+            if mgr is None:
+                continue
+            assert not mgr.tables, (rep.name, list(mgr.tables))
+            leaked = [b for b in range(mgr.alloc.num_blocks)
+                      if mgr.alloc.ref[b]]
+            assert not leaked, (rep.name, leaked)
+
+    def summary(self) -> Dict[str, float]:
+        """Deterministic cluster counters: per-replica weave rate and
+        tokens/forward, migration count, affinity hit rate, and the
+        decode-fleet aggregate weave rate (the §11 payoff metric).
+        ``migrations`` counts COMPLETED handoffs (adoptions) — a handoff
+        cancelled on the wire is in ``stats.migrations_started`` only."""
+        done = sum(rep.engine.block_mgr.stats.migrations_in
+                   for rep in self.replicas
+                   if rep.engine.block_mgr is not None)
+        out: Dict[str, float] = {
+            "migrations": float(done),
+            "affinity_hit_rate": self.stats.affinity_hit_rate,
+            "completed": float(len(self.completed)),
+        }
+        for rep in self.replicas:
+            st = rep.engine.stats
+            out[f"{rep.name}/weave_rate"] = st.weave_rate
+            out[f"{rep.name}/tokens_per_forward"] = st.tokens_per_forward
+        if self.decode_fleet:
+            fwd = sum(r.engine.stats.forwards for r in self.decode_fleet)
+            wv = sum(r.engine.stats.weave_forwards
+                     for r in self.decode_fleet)
+            out["decode_fleet/weave_rate"] = wv / fwd if fwd else 0.0
+        return out

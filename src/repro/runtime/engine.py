@@ -123,6 +123,17 @@ class LatencyStats:
 
 
 @dataclasses.dataclass
+class Handoff:
+    """A request parked for disaggregated prefill->decode migration
+    (runtime/cluster.py, DESIGN.md §11): the request object plus the KV it
+    computed — ``n_tokens`` committed context positions whose block payload
+    was extracted before the exporter released its references."""
+    req: Request
+    n_tokens: int
+    payload: dict
+
+
+@dataclasses.dataclass
 class EngineStats:
     steps: int = 0
     prefill_tokens: int = 0
@@ -235,6 +246,9 @@ class Engine:
             cache = api.init_cache(scfg.max_batch, scfg.max_len)
             cspec = api.cache_specs()
         self.sched = Scheduler(scfg, block_mgr=self.block_mgr)
+        # disaggregated serving (DESIGN.md §11): requests parked by
+        # ``_park_for_handoff`` wait here for the cluster to migrate them
+        self.handoff_ready: List[Handoff] = []
         self.cache = jax.device_put(
             cache, jax.tree.map(lambda s: NamedSharding(mesh, s), cspec,
                                 is_leaf=lambda s: isinstance(s, P)))
@@ -511,6 +525,13 @@ class Engine:
             self.sched.remove_waiting(req)
             req.state = State.DONE
             return True
+        if req.slot is None:
+            # parked for handoff (DESIGN.md §11): the exporter already
+            # released blocks and slot; just drop it from the handoff queue
+            self.handoff_ready = [h for h in self.handoff_ready
+                                  if h.req is not req]
+            req.state = State.DONE
+            return True
         if self.paged:
             # drops private AND prefix-shared refs; cached blocks park in
             # the LRU (still hittable), so cancelling never poisons the
@@ -521,6 +542,71 @@ class Engine:
         self.sched.active[req.slot] = None
         req.slot = None
         req.state = State.DONE
+        return True
+
+    # ------------------------------------------------------------------
+    # disaggregated prefill/decode KV handoff (runtime/cluster.py,
+    # DESIGN.md §11)
+    # ------------------------------------------------------------------
+    def _park_for_handoff(self, r: Request):
+        """Export the request's KV and detach it from this engine: the
+        payload is pulled off the device (the migration's network copy),
+        then every exporter-side reference is released — shared prefix
+        blocks keep their other readers, private ones recycle — and the
+        slot frees for the next prefill.  The request (state DECODE, its
+        first token already committed) waits in ``handoff_ready`` for the
+        cluster to adopt it on a decode replica."""
+        if not self.paged:
+            raise ValueError("KV handoff requires the paged backend "
+                             "(legacy slot rows cannot be exported)")
+        n_tokens = r.prefill_pos          # committed context now in cache
+        blocks = self.block_mgr.export_blocks(r.rid, n_tokens)
+        payload = jax.device_get(PG.extract_blocks(self.cache, blocks))
+        self.block_mgr.free_request(r.rid)
+        self.sched.active[r.slot] = None
+        r.slot = None
+        self.handoff_ready.append(Handoff(req=r, n_tokens=n_tokens,
+                                          payload=payload))
+
+    def take_handoffs(self) -> List[Handoff]:
+        out, self.handoff_ready = self.handoff_ready, []
+        return out
+
+    def adopt_request(self, req: Request, n_tokens: int, payload) -> bool:
+        """Adopt a migrated DECODE request: rebuild its block table on this
+        engine (sharing importer-side prefix-cache hits, implanting the
+        payload into the rest), re-register its prefix-cache entries, and
+        place it straight into a free slot — no re-prefill, decode resumes
+        from the migrated KV.  Returns False (no state changed, retry
+        later) when no slot is free or the pool cannot cover it."""
+        if not self.paged:
+            raise ValueError("adopt_request requires the paged backend")
+        if req.state != State.DECODE:
+            raise ValueError(f"rid={req.rid} is {req.state}, not DECODE")
+        free = [i for i, r in enumerate(self.sched.active) if r is None]
+        if not free:
+            return False
+        ctx = req.prompt + req.output[:-1]
+        assert n_tokens <= len(ctx), (req.rid, n_tokens, len(ctx))
+        imported = self.block_mgr.import_blocks(req.rid, ctx[:n_tokens],
+                                                n_tokens)
+        if imported is None:
+            return False
+        table, copy_idx = imported
+        # drain queued pool maintenance first: a freshly allocated table
+        # entry may still carry a pending pos reset from its previous
+        # owner, which would clobber the implant if applied after it
+        self._apply_fixups()
+        if copy_idx:
+            self.cache = PG.implant_blocks(
+                self.cache, PG.select_payload(payload, copy_idx),
+                [table[i] for i in copy_idx])
+        self.block_mgr.register_filled(req.rid, ctx, n_tokens)
+        req.handoff_after_prefill = False
+        req.migrations += 1
+        req.slot = free[0]
+        req.arrival_step = self._step_count
+        self.sched.active[req.slot] = req
         return True
 
     def step(self) -> bool:
@@ -635,6 +721,8 @@ class Engine:
                 r.first_token_step = self._step_count
             r.state = State.DECODE
             self._maybe_finish(r)
+            if r.state != State.DONE and r.handoff_after_prefill:
+                self._park_for_handoff(r)
 
     def _commit_decode(self, r: Request, tok: int):
         n_written = r.length  # positions [0, length-1] now in cache

@@ -1,5 +1,6 @@
-"""KV-cache slot management: static-shape caches with per-request slots and
-ring-buffer (sliding-window) insertion.
+"""KV-cache slot management (DESIGN.md §6): static-shape caches with
+per-request slots and ring-buffer (sliding-window) insertion — the legacy
+backend the paged pool (DESIGN.md §7) is the alternative to.
 
 JAX requires static shapes, so instead of vLLM's dynamically allocated pages
 we preallocate (L, B_slots, C, kvh, dh) and emulate the block-table

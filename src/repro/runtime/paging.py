@@ -1,6 +1,8 @@
-"""Paged KV-cache subsystem: block pool, per-request block tables, and the
-host-side block manager (allocation, refcounted prefix sharing, LRU
-eviction, copy-on-write, preemption support).
+"""Paged KV-cache subsystem (DESIGN.md §7): block pool, per-request block
+tables, and the host-side block manager (allocation, refcounted prefix
+sharing, LRU eviction, copy-on-write, preemption support, and the
+cross-pool KV migration the cluster layer's disaggregated mode uses —
+DESIGN.md §11).
 
 JAX requires static shapes, so vLLM's paged attention is emulated the same
 way the slot cache emulates contiguous caches: the pool is one preallocated
@@ -188,6 +190,44 @@ def copy_blocks(pool, copies: Sequence[Tuple[int, int]]):
     return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pool)
 
 
+def extract_blocks(pool, block_ids: Sequence[int]):
+    """Pull the (k, v, pos) payload of the given physical blocks out of the
+    pool — the device half of a KV-migration export (DESIGN.md §11).  The
+    payload has the pool's tree structure with the block axis shrunk to
+    ``len(block_ids)``; ``pos`` rides along so the importer's blocks are
+    fully initialized (unwritten cells stay -1, no reset needed)."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+    if not _stacked(pool):
+        return {name: {k: a[ids] for k, a in layer.items()}
+                for name, layer in pool.items()}
+    return {k: a[:, ids] for k, a in pool.items()}
+
+
+def implant_blocks(pool, payload, block_ids: Sequence[int]):
+    """Write an extracted payload into the pool at ``block_ids`` — the
+    device half of a KV-migration import (DESIGN.md §11).  Overwrites every
+    cell (k, v, AND pos) of each target block, so the importer needs no
+    separate reset for them."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+    if not _stacked(pool):
+        return {name: {k: a.at[ids].set(jnp.asarray(payload[name][k]))
+                       for k, a in layer.items()}
+                for name, layer in pool.items()}
+    return {k: a.at[:, ids].set(jnp.asarray(payload[k]))
+            for k, a in pool.items()}
+
+
+def select_payload(payload, idx: Sequence[int]):
+    """Subset an extracted payload along its block axis (the importer only
+    implants blocks it could not share from its own prefix cache)."""
+    import numpy as np
+    sel = np.asarray(idx, np.int32)
+    if not _stacked(payload):
+        return {name: {k: a[sel] for k, a in layer.items()}
+                for name, layer in payload.items()}
+    return {k: a[:, sel] for k, a in payload.items()}
+
+
 # ==========================================================================
 # host side: allocator + manager
 # ==========================================================================
@@ -263,6 +303,11 @@ class PagingStats:
     preemptions: int = 0
     cow_copies: int = 0
     registered_blocks: int = 0
+    # --- disaggregated KV migration (runtime/cluster.py, DESIGN.md §11) ---
+    migrations_out: int = 0      # requests exported off this manager
+    migrations_in: int = 0       # requests adopted by this manager
+    import_shared_blocks: int = 0  # import hits served from the prefix cache
+    import_copied_blocks: int = 0  # import blocks filled by payload copy
 
     @property
     def hit_rate(self) -> float:
@@ -310,6 +355,38 @@ class BlockManager:
         bs = self.block_size
         return (n_tokens + bs - 1) // bs
 
+    def _build_table(self, hit_blocks: Sequence[int], n_total: int,
+                     headroom: int
+                     ) -> Optional[Tuple[List[int], List[int]]]:
+        """Shared admission/adoption core: take a reference on every
+        prefix-hit block, allocate private blocks up to ``n_total``, and
+        require ``headroom`` spares to remain.  Returns ``(table,
+        fresh_idx)`` (the table positions that were freshly allocated), or
+        ``None`` with every acquired reference rolled back — ONE
+        implementation so admission (``allocate_prompt``) and migration
+        (``import_blocks``) can never diverge on rollback or headroom
+        semantics."""
+        table: List[int] = []
+        fresh: List[int] = []
+        for b in hit_blocks:
+            self.alloc.share(b)
+            table.append(b)
+        ok = True
+        for i in range(len(hit_blocks), n_total):
+            b = self.alloc.alloc()
+            if b is None:
+                ok = False
+                break
+            table.append(b)
+            fresh.append(i)
+        if ok and self.alloc.num_available() < headroom:
+            ok = False
+        if not ok:
+            for b in table:
+                self.alloc.decref(b, cached=self.prefix.is_cached(b))
+            return None
+        return table, fresh
+
     def allocate_prompt(self, rid: int, context: Sequence[int], *,
                         headroom: int = 1) -> int:
         """Build the request's block table: share prefix-hit blocks, then
@@ -326,25 +403,11 @@ class BlockManager:
             hit_blocks = self.prefix.match(chain_hashes(context, bs))
         if len(hit_blocks) * bs >= len(context):   # leave >= 1 miss token
             hit_blocks = hit_blocks[:-1]
-        table = []
-        for b in hit_blocks:
-            self.alloc.share(b)
-            table.append(b)
-        n_total = self.blocks_needed(len(context))
-        ok = True
-        for _ in range(n_total - len(hit_blocks)):
-            b = self.alloc.alloc()
-            if b is None:
-                ok = False
-                break
-            table.append(b)
-        if ok and self.alloc.num_available() < headroom:
-            ok = False
-        if not ok:
-            for b in table:
-                self.alloc.decref(b, cached=self.prefix.is_cached(b))
+        built = self._build_table(hit_blocks, self.blocks_needed(
+            len(context)), headroom)
+        if built is None:
             return -1
-        self.tables[rid] = table
+        self.tables[rid] = built[0]
         hit = len(hit_blocks) * bs
         self.stats.hit_tokens += hit
         self.stats.miss_tokens += len(context) - hit
@@ -430,6 +493,57 @@ class BlockManager:
             freed = self.alloc.decref(b, cached=cached)
             if freed and not cached:
                 self._pending_resets.append(b)
+
+    # ---- disaggregated KV migration (DESIGN.md §11) ----------------------
+    def export_blocks(self, rid: int, n_tokens: int) -> List[int]:
+        """Begin a KV migration: the physical blocks covering the request's
+        first ``n_tokens`` committed positions, in table order.  The table
+        stays intact — the caller extracts the payload from these blocks
+        (``extract_blocks``) and then releases the exporter's references
+        with ``free_request``, at which point every exporter-side refcount
+        this request held is back where it started (shared prefix blocks
+        keep their other readers, private blocks recycle)."""
+        table = self.tables[rid]
+        keep = self.blocks_needed(n_tokens)
+        assert keep <= len(table), (rid, n_tokens, len(table))
+        self.stats.migrations_out += 1
+        return list(table[:keep])
+
+    def import_blocks(self, rid: int, context: Sequence[int],
+                      n_tokens: int, *, headroom: int = 1
+                      ) -> Optional[Tuple[List[int], List[int]]]:
+        """Adopt a migrated request: build its block table on THIS manager.
+        Full blocks whose chain hash already lives in the importer's prefix
+        cache are shared (refcount++, no payload copy needed — the hash
+        chain guarantees identical content); the rest are allocated
+        private.  Unlike ``allocate_prompt`` a 100% full-block match is
+        fine: a migrated request needs no miss token, its next input token
+        was already sampled by the exporter.
+
+        Returns ``(table, copy_idx)`` where ``copy_idx`` are the table
+        positions that need a payload implant (``implant_blocks``), or
+        ``None`` with every acquired reference rolled back when the pool
+        cannot cover ``blocks_needed(n_tokens)`` plus ``headroom``.  The
+        caller re-registers the prefix-cache entries afterwards via
+        ``register_filled`` (fresh blocks become hittable on the importer,
+        shared ones already are)."""
+        assert rid not in self.tables, rid
+        bs = self.block_size
+        n_full = n_tokens // bs
+        hit_blocks: List[int] = []
+        if self.prefix_caching:
+            hit_blocks = self.prefix.match(
+                chain_hashes(context[:n_full * bs], bs))
+        built = self._build_table(hit_blocks, self.blocks_needed(n_tokens),
+                                  headroom)
+        if built is None:
+            return None
+        table, copy_idx = built
+        self.tables[rid] = table
+        self.stats.migrations_in += 1
+        self.stats.import_shared_blocks += len(hit_blocks)
+        self.stats.import_copied_blocks += len(copy_idx)
+        return table, copy_idx
 
     # ---- release ---------------------------------------------------------
     def free_request(self, rid: int) -> None:

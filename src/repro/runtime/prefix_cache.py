@@ -1,4 +1,6 @@
-"""Hash-chained prefix cache over paged KV blocks (vLLM-style).
+"""Hash-chained prefix cache over paged KV blocks (vLLM-style;
+DESIGN.md §7).  The same chain hashes double as the cluster layer's
+prefix-affinity routing keys (DESIGN.md §11).
 
 Only FULL blocks participate: a block's key is the chain hash of every
 token in it plus the previous block's hash, so a hit on block *i* implies

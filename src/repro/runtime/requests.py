@@ -1,5 +1,7 @@
 """Request lifecycle + synthetic workload traces (fixed-length and
-ShareGPT-like mixed-length conversations).
+ShareGPT-like mixed-length conversations), plus the arrival processes
+that drive online serving (DESIGN.md §10) and the shared-prefix group
+traces the cluster router benchmarks use (DESIGN.md §11).
 
 Trace generators never touch the global ``random`` module: they take an
 explicit ``seed`` (int) or an already-constructed ``random.Random``
@@ -43,6 +45,13 @@ class Request:
     resumed: bool = False             # re-prefilling after preemption
     preemptions: int = 0
     prompt_hit_tokens: int = 0        # prefix-cache hit at last admission
+    # --- disaggregated serving (runtime/cluster.py, DESIGN.md §11) ---
+    # park the request for KV handoff once its prefill completes (set by
+    # the cluster when routing to a prefill-role replica; cleared at
+    # adoption so a preemption on the decode replica re-prefills locally
+    # instead of re-migrating)
+    handoff_after_prefill: bool = False
+    migrations: int = 0               # completed prefill->decode handoffs
     # --- online serving (runtime/server.py, DESIGN.md §10) ---
     # all times are VIRTUAL (deterministic server clock), not wall clock
     arrival_time: float = 0.0         # when the request enters the system
@@ -182,6 +191,28 @@ def bursty_arrivals(reqs: List[Request], rate: float, burst: int,
         t += rng.expovariate(rate)
         times.append(t)
     return replay_arrivals(reqs, times)
+
+
+def grouped_prefix_trace(n_groups: int, per_group: int, prefix_len: int,
+                         tail_len: int, output_len: int, vocab: int,
+                         seed: Seed = 0) -> List[Request]:
+    """Groups of requests sharing a long common prompt prefix (system
+    prompt / few-shot header) with private tails — the workload where
+    prefix-affinity routing (runtime/cluster.py, DESIGN.md §11) keeps a
+    group's traffic on the replica whose prefix cache already holds its
+    blocks.  Requests are interleaved round-robin across groups so a
+    position-based router would scatter every group over the fleet."""
+    rng = _rng(seed)
+    prefixes = [[rng.randrange(vocab) for _ in range(prefix_len)]
+                for _ in range(n_groups)]
+    reqs = []
+    for i in range(per_group):
+        for g in range(n_groups):
+            tail = [rng.randrange(vocab) for _ in range(tail_len)]
+            reqs.append(Request(rid=i * n_groups + g,
+                                prompt=prefixes[g] + tail,
+                                max_new_tokens=output_len))
+    return reqs
 
 
 def sharegpt_like_trace(n_requests: int, vocab: int, seed: Seed = 0,

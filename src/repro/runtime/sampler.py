@@ -1,4 +1,6 @@
-"""Token sampling over vocab-sharded logits (inside shard_map).
+"""Token sampling over vocab-sharded logits, inside shard_map
+(DESIGN.md §6 shared machinery; top-k/top-p feed the speculative-decoding
+target distribution, DESIGN.md §8).
 
 Everything here operates on the LOCAL vocab shard ``(B, S, V_loc)`` and
 composes cross-shard collectives (pmax/psum/all_gather) instead of ever

@@ -30,6 +30,10 @@ Lifecycle events between steps (engine steps are atomic):
 * deadline    — a request past its ``deadline`` is expired (when
                 ``expire_on_deadline``) or allowed to finish late; either
                 way it counts against goodput, never as a server failure.
+
+Scaling past one engine is the cluster layer's job: runtime/cluster.py
+(DESIGN.md §11) runs N engines on the same virtual-clock axis behind a
+router, reusing ``StepCost`` for per-replica step timing.
 """
 from __future__ import annotations
 

@@ -407,6 +407,87 @@ def online_crossover_rate(cfg: ModelConfig, rates: List[float],
     return None
 
 
+def decode_fleet_mix(cfg: ModelConfig, mode: str, rate: float, *,
+                     mean_out: int = 338, tp: int = 8, ctx: int = 8192,
+                     hw: Optional[HW] = None, iters: int = 60,
+                     max_decode_tokens: int = 1024) -> Dict[str, float]:
+    """Steady-state per-iteration token count of a DEDICATED decode
+    replica absorbing decode traffic at ``rate`` requests per virtual-time
+    unit (runtime/cluster.py's disaggregated mode, DESIGN.md §11): the
+    Little's-law fixed point ``d = rate * mean_out * t(d)`` with pure
+    decode iterations (no chunk share — prefill lives on other replicas),
+    capped by the replica's batch capacity."""
+    hw = hw or HW()
+    kw = dict(tp=tp, ctx=ctx, hw=hw)
+    t = e2e_latency(cfg, mode, 1, **kw)
+    d = 1.0
+    for _ in range(iters):
+        d = min(max(rate * mean_out * t, 1.0), float(max_decode_tokens))
+        t = 0.5 * t + 0.5 * e2e_latency(cfg, mode, int(round(d)), **kw)
+    return {"t_iter": t, "decode_tokens": d}
+
+
+def cluster_summary(cfg: ModelConfig, rates: List[float], n_replicas: int,
+                    *, n_decode: int = 1, mean_in: int = 161,
+                    mean_out: int = 338, tp: int = 8, ctx: int = 8192,
+                    hw: Optional[HW] = None, max_decode_tokens: int = 1024,
+                    max_chunk_tokens: int = 2048
+                    ) -> Dict[float, Dict[str, float]]:
+    """Disaggregation crossover vs TOTAL offered load (the `serve/cluster`
+    analytic rows, DESIGN.md §11).
+
+    Monolithic fleet: ``n_replicas`` engines each serving ``rate /
+    n_replicas`` of the mixed traffic — per-replica packed iterations of
+    ``d + c`` tokens from ``online_load_mix``.  Disaggregated fleet of the
+    SAME size: ``n_decode`` dedicated decode replicas concentrate the
+    whole load's decode tokens (``rate / n_decode`` each), so their merged
+    batches grow ``n_replicas * mean_out / (n_decode * (mean_in +
+    mean_out))``-fold relative to a monolithic engine's share — the factor
+    that pushes them over the TokenWeave split floor first."""
+    hw = hw or HW()
+    out: Dict[float, Dict[str, float]] = {}
+    for rate in rates:
+        mono = online_load_mix(cfg, "tokenweave", rate / n_replicas,
+                               mean_in=mean_in, mean_out=mean_out, tp=tp,
+                               ctx=ctx, hw=hw, packed=True,
+                               max_decode_tokens=max_decode_tokens,
+                               max_chunk_tokens=max_chunk_tokens)
+        fleet = decode_fleet_mix(cfg, "tokenweave", rate / n_decode,
+                                 mean_out=mean_out, tp=tp, ctx=ctx, hw=hw,
+                                 max_decode_tokens=max_decode_tokens)
+        m_tok = int(round(mono["decode_tokens"] + mono["chunk_tokens"]))
+        d_tok = int(round(fleet["decode_tokens"]))
+        fleet_fo = decode_fleet_mix(cfg, "fuseonly", rate / n_decode,
+                                    mean_out=mean_out, tp=tp, ctx=ctx,
+                                    hw=hw,
+                                    max_decode_tokens=max_decode_tokens)
+        out[rate] = {
+            "mono_iter_tokens": float(m_tok),
+            "decode_fleet_tokens": float(d_tok),
+            "t_iter_mono": mono["t_iter"],
+            "t_iter_decode_fleet": fleet["t_iter"],
+            "decode_fleet_gain": fleet_fo["t_iter"] / fleet["t_iter"],
+            "mono_weaves": float(smart_split(m_tok, hw.tile) is not None),
+            "decode_fleet_weaves": float(
+                smart_split(d_tok, hw.tile) is not None),
+        }
+    return out
+
+
+def cluster_crossover_rate(cfg: ModelConfig, rates: List[float],
+                           n_replicas: int, **kw) -> Optional[float]:
+    """Lowest TOTAL offered load where the disaggregated decode fleet's
+    merged batches weave while a monolithic engine's share of the same
+    traffic does not — the load window disaggregation opens (None when no
+    swept rate lands in it)."""
+    summary = cluster_summary(cfg, sorted(rates), n_replicas, **kw)
+    for rate in sorted(summary):
+        s = summary[rate]
+        if s["decode_fleet_weaves"] and not s["mono_weaves"]:
+            return rate
+    return None
+
+
 def packed_summary(cfg: ModelConfig, decode_tokens: int, chunk_tokens: int,
                    *, tp: int = 8, ctx: int = 8192,
                    hw: Optional[HW] = None) -> Dict[str, float]:

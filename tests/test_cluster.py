@@ -1,0 +1,369 @@
+"""Cluster serving layer (runtime/cluster.py, DESIGN.md §11).
+
+Covers the router contract (token-identity vs a single engine for every
+router, deterministic prefix-affinity placement under seeded traces), the
+KV-migration lifecycle (block-table + payload copy, refcounts back to
+zero on BOTH exporter and importer after finish and after cancels at
+every migration stage, prefix re-registration and importer-side sharing),
+and fault injection proving the quiescence sweep catches a refcount-
+leaking ``import_blocks``.
+"""
+import numpy as np
+import pytest
+
+from repro.runtime.cluster import (ClusterConfig, ClusterServer,
+                                   MigrationCost, Replica, ROUTERS)
+from repro.runtime.engine import Engine
+from repro.runtime.paging import BlockManager
+from repro.runtime.requests import (Request, State, grouped_prefix_trace,
+                                    poisson_arrivals)
+from repro.runtime.scheduler import SchedulerConfig
+
+_JIT_CACHES = {}
+
+
+def _engine(tiny_model, **kw):
+    api, mesh, params = tiny_model
+    d = dict(max_batch=4, chunk_tokens=48, max_len=96, prefill_bucket=16,
+             paged=True, block_size=8)
+    d.update(kw)
+    cache = _JIT_CACHES.setdefault(tuple(sorted(d.items())), {})
+    return Engine(api, mesh, params, SchedulerConfig(**d), jit_cache=cache)
+
+
+def _leak_sweep(eng):
+    mgr = eng.block_mgr
+    assert not mgr.tables, list(mgr.tables)
+    leaked = [b for b in range(mgr.alloc.num_blocks) if mgr.alloc.ref[b]]
+    assert not leaked, leaked
+
+
+def _trace(n=6, seed=3, out=4, rate=0.5):
+    rng = np.random.RandomState(seed)
+    reqs = [Request(rid=i,
+                    prompt=list(rng.randint(0, 128,
+                                            size=rng.randint(10, 30))),
+                    max_new_tokens=out) for i in range(n)]
+    return poisson_arrivals(reqs, rate=rate, seed=seed)
+
+
+# --------------------------------------------------------------------------
+# BlockManager export/import (host-side, no device)
+# --------------------------------------------------------------------------
+
+def test_export_import_refcounts_and_prefix_reregistration():
+    src = BlockManager(num_blocks=8, block_size=4, max_blocks_per_req=4)
+    ctx = list(range(10))                       # 2 full blocks + tail
+    assert src.allocate_prompt(1, ctx) == 0
+    src.register_filled(1, ctx, 8)
+    blocks = src.export_blocks(1, 10)
+    assert blocks == src.tables[1][:3]
+    src.free_request(1)
+    assert not src.tables
+    # exporter: registered full blocks park in the LRU (still hittable),
+    # every refcount back to zero
+    assert all(src.alloc.ref[b] == 0 for b in range(8))
+    assert len(src.prefix) == 2
+
+    dst = BlockManager(num_blocks=8, block_size=4, max_blocks_per_req=4)
+    imported = dst.import_blocks(1, ctx, 10)
+    assert imported is not None
+    table, copy_idx = imported
+    assert len(table) == 3 and copy_idx == [0, 1, 2]   # cold: all copied
+    dst.register_filled(1, ctx, 10)
+    assert len(dst.prefix) == 2                 # re-registered on importer
+    assert dst.stats.migrations_in == 1
+    # a second import of a shared-prefix context hits the importer's cache
+    ctx2 = list(range(8)) + [99, 98]
+    imported2 = dst.import_blocks(2, ctx2, 10)
+    table2, copy_idx2 = imported2
+    assert copy_idx2 == [2]                     # 2 full-block hits shared
+    assert dst.alloc.ref[table2[0]] == 2 and dst.alloc.ref[table2[1]] == 2
+    assert dst.stats.import_shared_blocks == 2
+    dst.free_request(1)
+    dst.free_request(2)
+    assert all(dst.alloc.ref[b] == 0 for b in range(8))
+
+
+def test_import_blocks_rolls_back_atomically_when_pool_too_small():
+    dst = BlockManager(num_blocks=3, block_size=4, max_blocks_per_req=4)
+    ctx = list(range(12))                       # needs 3 blocks + headroom
+    assert dst.import_blocks(1, ctx, 12) is None
+    assert not dst.tables
+    assert all(dst.alloc.ref[b] == 0 for b in range(3))
+    assert dst.alloc.num_available() == 3
+
+
+# --------------------------------------------------------------------------
+# engine-level handoff: park -> adopt -> decode resumes from migrated KV
+# --------------------------------------------------------------------------
+
+def test_handoff_token_identical_and_refcounts_zero_both_sides(tiny_model):
+    prompt = list(np.random.RandomState(0).randint(0, 128, size=20))
+
+    ref_eng = _engine(tiny_model)
+    ref_eng.add_request(Request(rid=0, prompt=list(prompt),
+                                max_new_tokens=6))
+    ref = ref_eng.run()[0].output
+
+    src = _engine(tiny_model)
+    dst = _engine(tiny_model)
+    req = Request(rid=0, prompt=list(prompt), max_new_tokens=6,
+                  handoff_after_prefill=True)
+    src.add_request(req)
+    src.run()
+    handoffs = src.take_handoffs()
+    assert len(handoffs) == 1 and handoffs[0].req is req
+    assert req.state == State.DECODE and len(req.output) == 1
+    _leak_sweep(src)                        # exporter released everything
+    h = handoffs[0]
+    assert dst.adopt_request(h.req, h.n_tokens, h.payload)
+    done = dst.run()
+    assert done[0].output == ref            # decode resumed from migrated KV
+    assert req.migrations == 1
+    _leak_sweep(dst)
+    _leak_sweep(src)
+
+
+def test_adopt_request_returns_false_without_slot_or_blocks(tiny_model):
+    src = _engine(tiny_model)
+    req = Request(rid=7, prompt=list(range(20)), max_new_tokens=4,
+                  handoff_after_prefill=True)
+    src.add_request(req)
+    src.run()
+    h = src.take_handoffs()[0]
+
+    # no free slot: fill the importer's slots first
+    dst = _engine(tiny_model, max_batch=2)
+    blockers = [Request(rid=i, prompt=list(range(1, 12)), max_new_tokens=64)
+                for i in (1, 2)]
+    for b in blockers:
+        dst.add_request(b)
+    while not all(b.state == State.DECODE for b in blockers):
+        dst.step()
+    assert not dst.adopt_request(h.req, h.n_tokens, h.payload)
+    assert h.req.rid not in dst.block_mgr.tables   # nothing half-done
+
+    # no blocks: a pool too small for the context
+    tiny_pool = _engine(tiny_model, max_batch=2, num_blocks=3)
+    assert not tiny_pool.adopt_request(h.req, h.n_tokens, h.payload)
+    _leak_sweep(tiny_pool)
+
+
+# --------------------------------------------------------------------------
+# cluster: routing
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("router", sorted(ROUTERS))
+def test_every_router_token_identical_to_single_engine(router, tiny_model):
+    ref_eng = _engine(tiny_model)
+    for r in _trace():
+        ref_eng.add_request(r)
+    ref = {r.rid: r.output for r in ref_eng.run()}
+
+    reps = [Replica(f"r{i}", _engine(tiny_model)) for i in range(3)]
+    cs = ClusterServer(reps, ClusterConfig(router=router))
+    for r in _trace():
+        cs.submit(r)
+    done = cs.run()
+    assert {r.rid: r.output for r in done} == ref
+    cs.check_quiescent()
+
+
+def _affinity_run(tiny_model):
+    reps = [Replica(f"r{i}", _engine(tiny_model)) for i in range(3)]
+    cs = ClusterServer(reps, ClusterConfig(router="prefix_affinity"))
+    trace = grouped_prefix_trace(3, 4, prefix_len=24, tail_len=6,
+                                 output_len=4, vocab=128, seed=3)
+    for r in poisson_arrivals(trace, rate=0.4, seed=5):
+        cs.submit(r)
+    done = cs.run()
+    cs.check_quiescent()
+    return cs.placement, {r.rid: r.output for r in done}, cs
+
+
+def test_prefix_affinity_deterministic_and_groups_stick(tiny_model):
+    p1, out1, cs1 = _affinity_run(tiny_model)
+    p2, out2, cs2 = _affinity_run(tiny_model)
+    assert p1 == p2 and out1 == out2            # seeded trace -> replayable
+    assert cs1.summary() == cs2.summary()
+    assert cs1.stats.affinity_hit_rate > 0
+    # once a group's first request warmed a replica, later group members
+    # follow it (their shared prefix is hot exactly there)
+    assert len(p1) == 12
+    for rid in sorted(p1):
+        if rid >= 3:                            # group seen before
+            assert p1[rid] == p1[rid % 3], (rid, p1)
+
+
+def test_least_loaded_prefers_idle_replica(tiny_model):
+    reps = [Replica(f"r{i}", _engine(tiny_model)) for i in range(2)]
+    cs = ClusterServer(reps, ClusterConfig(router="least_loaded"))
+    # two simultaneous arrivals: the second must go to the other replica
+    # (the first is queued there, its tokens counted by load())
+    reqs = [Request(rid=i, prompt=list(range(1, 21)), max_new_tokens=32)
+            for i in range(2)]
+    for r in reqs:
+        r.arrival_time = 0.0
+        cs.submit(r)
+    cs.run()
+    cs.check_quiescent()
+    assert reps[0].engine.stats.completed == 1
+    assert reps[1].engine.stats.completed == 1
+
+
+# --------------------------------------------------------------------------
+# cluster: disaggregated prefill/decode migration lifecycle
+# --------------------------------------------------------------------------
+
+def _disagg(tiny_model, migration_base=1.0, decode_kw=None):
+    reps = [Replica("p0", _engine(tiny_model), role="prefill"),
+            Replica("d0", _engine(tiny_model, **(decode_kw or {})),
+                    role="decode")]
+    cfg = ClusterConfig(router="round_robin",
+                        migration_cost=MigrationCost(base=migration_base))
+    return reps, ClusterServer(reps, cfg)
+
+
+def test_disagg_token_identical_with_migration_latency(tiny_model):
+    ref_eng = _engine(tiny_model)
+    for r in _trace(n=5):
+        ref_eng.add_request(r)
+    ref = {r.rid: r.output for r in ref_eng.run()}
+
+    reps, cs = _disagg(tiny_model, migration_base=7.5)
+    for r in _trace(n=5):
+        cs.submit(r)
+    done = cs.run()
+    assert {r.rid: r.output for r in done} == ref
+    assert cs.summary()["migrations"] == 5
+    assert all(r.migrations == 1 for r in done)
+    assert reps[1].engine.block_mgr.stats.migrations_in == 5
+    cs.check_quiescent()
+
+
+def test_cancel_mid_migration_releases_both_sides(tiny_model):
+    # a huge migration latency parks the handoff in the decode replica's
+    # adoption queue; the cancel lands while the KV is "on the wire"
+    reps, cs = _disagg(tiny_model, migration_base=1000.0)
+    req = Request(rid=0, prompt=list(range(1, 21)), max_new_tokens=8)
+    req.arrival_time = 0.0
+    cs.submit(req)
+    cs.cancel(0, at=50.0)
+    done = cs.run()
+    assert done == [] and cs.aborted == [req]
+    assert req.finish_reason == "cancelled"
+    assert cs.stats.migrations_started == 1     # export happened...
+    assert cs.summary()["migrations"] == 0      # ...but it never completed
+    assert reps[1].engine.block_mgr.stats.migrations_in == 0
+    cs.check_quiescent()                        # zero refs on BOTH sides
+
+
+def test_cancel_after_adoption_releases_importer(tiny_model):
+    reps, cs = _disagg(tiny_model)
+    req = Request(rid=0, prompt=list(range(1, 21)), max_new_tokens=500)
+    req.arrival_time = 0.0
+    cs.submit(req)
+    cs.cancel(0, at=30.0)                       # long after adoption
+    done = cs.run()
+    assert done == [] and req.finish_reason == "cancelled"
+    assert reps[1].engine.block_mgr.stats.migrations_in == 1
+    assert reps[1].engine.stats.cancelled == 1
+    cs.check_quiescent()
+
+
+def test_cancel_before_routing_never_reaches_any_replica(tiny_model):
+    reps, cs = _disagg(tiny_model)
+    req = Request(rid=0, prompt=list(range(1, 9)), max_new_tokens=4)
+    req.arrival_time = 10.0
+    cs.submit(req)
+    cs.cancel(0, at=5.0)
+    assert cs.run() == []
+    assert req.finish_reason == "cancelled"
+    assert all(r.engine.stats.steps == 0 for r in reps)
+    cs.check_quiescent()
+
+
+def test_adoption_head_of_line_blocks_until_slot_frees(tiny_model):
+    # decode replica with 2 slots, 3 migrated requests: the third adoption
+    # must wait for a slot, then land and finish — nobody starves
+    reps, cs = _disagg(tiny_model, decode_kw=dict(max_batch=2))
+    for r in _trace(n=3, out=8, rate=5.0):
+        cs.submit(r)
+    done = cs.run()
+    assert len(done) == 3
+    assert cs.summary()["migrations"] == 3
+    cs.check_quiescent()
+
+
+def test_explicit_replica_step_cost_survives_cluster_default(tiny_model):
+    from repro.runtime.server import StepCost
+    slow = StepCost(base=2.0)
+    reps = [Replica("a", _engine(tiny_model), step_cost=slow),
+            Replica("b", _engine(tiny_model))]
+    ClusterServer(reps, ClusterConfig())
+    assert reps[0].step_cost is slow            # heterogeneous fleet kept
+    assert reps[1].step_cost is not None        # default filled in
+
+
+def test_disagg_requires_paged_backend(tiny_model):
+    api, mesh, params = tiny_model
+    legacy = Engine(api, mesh, params,
+                    SchedulerConfig(max_batch=4, chunk_tokens=48,
+                                    max_len=96, prefill_bucket=16,
+                                    paged=False))
+    reps = [Replica("p0", legacy, role="prefill"),
+            Replica("d0", _engine(tiny_model), role="decode")]
+    with pytest.raises(ValueError, match="paged"):
+        ClusterServer(reps, ClusterConfig())
+
+
+def test_disagg_roles_validated(tiny_model):
+    with pytest.raises(ValueError, match="prefill AND one decode"):
+        ClusterServer([Replica("p0", _engine(tiny_model), role="prefill")],
+                      ClusterConfig())
+    with pytest.raises(ValueError, match="mixed"):
+        ClusterServer([Replica("p0", _engine(tiny_model), role="prefill"),
+                       Replica("d0", _engine(tiny_model), role="decode"),
+                       Replica("m0", _engine(tiny_model))],
+                      ClusterConfig())
+
+
+# --------------------------------------------------------------------------
+# fault injection: the quiescence sweep must BITE
+# --------------------------------------------------------------------------
+
+def test_refcount_leaking_import_blocks_is_caught(tiny_model):
+    reps, cs = _disagg(tiny_model)
+    mgr = reps[1].engine.block_mgr
+    real_import = mgr.import_blocks
+
+    def leaky_import(rid, context, n_tokens, **kw):
+        out = real_import(rid, context, n_tokens, **kw)
+        if out is not None:
+            table, _ = out
+            mgr.alloc.share(table[0])           # the leak: an extra ref
+        return out
+
+    mgr.import_blocks = leaky_import
+    for r in _trace(n=2):
+        cs.submit(r)
+    cs.run()
+    with pytest.raises(AssertionError):
+        cs.check_quiescent()
+
+
+def test_decref_skipping_free_request_is_caught(tiny_model):
+    reps, cs = _disagg(tiny_model)
+    mgr = reps[1].engine.block_mgr
+
+    def broken_free(rid):
+        mgr.tables.pop(rid, None)               # forgets every decref
+        mgr._reg_cursor.pop(rid, None)
+
+    mgr.free_request = broken_free
+    for r in _trace(n=2):
+        cs.submit(r)
+    cs.run()
+    with pytest.raises(AssertionError):
+        cs.check_quiescent()
