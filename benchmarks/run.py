@@ -10,10 +10,17 @@ carries the figure-level ratio the paper reports.
 ``--json PATH`` additionally writes the DETERMINISTIC serving metrics
 (weave-activation rate, tokens/forward, prefix hit rate, spec acceptance
 — counters, never wall clock) for the CI regression gate
-(`scripts/check_bench.py` vs `benchmarks/baseline.json`).
+(`scripts/check_bench.py` vs `benchmarks/baseline.json`).  Every gated
+metric is sourced from a metrics-registry ``snapshot()`` (DESIGN.md §12)
+and the JSON carries a ``__provenance__`` map recording where each value
+came from — check_bench fails any baseline key it cannot trace back to
+the registry.  The serve benchmarks additionally run with a
+``TraceRecorder`` attached and assert the trace-derived weave counts
+equal ``EngineStats`` EXACTLY; ``--trace PATH`` exports the merged
+Chrome-trace/Perfetto JSON (inspect with scripts/trace_view.py).
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only a,b] \
-        [--strict] [--json BENCH_serve.json]
+        [--strict] [--json BENCH_serve.json] [--trace BENCH_trace.json]
 """
 from __future__ import annotations
 
@@ -26,12 +33,42 @@ import jax
 import jax.numpy as jnp
 
 # deterministic metrics collected during the run for --json (the CI
-# regression gate compares them against benchmarks/baseline.json)
+# regression gate compares them against benchmarks/baseline.json), the
+# per-metric provenance map written alongside them, and the serve
+# benchmarks' trace recorders (merged by --trace)
 _METRICS: dict = {}
+_PROVENANCE: dict = {}
+_RECORDERS: list = []
 
 
-def _metric(name, value):
+def _metric(name, value, source="adhoc"):
     _METRICS[name] = round(float(value), 6)
+    _PROVENANCE[name] = source
+
+
+def _reg(name, snap, key):
+    """Gated metric copied verbatim from a registry snapshot key."""
+    _metric(name, snap[key], source=f"registry:{key}")
+
+
+def _recorder(ns):
+    """New TraceRecorder registered for the --trace export.  ``ns``
+    namespaces request ids so merged traces keep one lifecycle thread
+    per (benchmark, engine, rid)."""
+    from repro.obs import TraceRecorder
+    rec = TraceRecorder(request_ns=f"{ns}/")
+    _RECORDERS.append(rec)
+    return rec
+
+
+def _assert_trace_matches(rec, stats, what, track=None):
+    """The hard §12 invariant: weave counts recomputed from the trace's
+    per-forward attribution spans equal the engine counters EXACTLY."""
+    from repro.obs import weave_counts_from_trace
+    w, n = weave_counts_from_trace(rec, track=track)
+    assert (w, n) == (stats.weave_forwards, stats.forwards), (
+        f"{what}: trace-derived weave counts ({w}/{n}) != EngineStats "
+        f"({stats.weave_forwards}/{stats.forwards})")
 
 
 def _row(name, us, derived=""):
@@ -222,10 +259,14 @@ def serve_prefix_cache(quick=False):
          f"prefill_saved={cold_prefill - eng.stats.prefill_tokens} "
          f"preemptions={st.preemptions} evictions={st.evictions} "
          f"outputs_identical=True")
-    _metric("serve/prefix_cache/hit_rate", st.hit_rate)
+    snap = eng.metrics_snapshot()
+    cold_snap = runs[False][0].metrics_snapshot()
+    _reg("serve/prefix_cache/hit_rate", snap, "paging/hit_rate")
     _metric("serve/prefix_cache/prefill_saved",
-            cold_prefill - eng.stats.prefill_tokens)
-    _metric("serve/prefix_cache/preemptions", st.preemptions)
+            cold_snap["engine/prefill_tokens"]
+            - snap["engine/prefill_tokens"],
+            source="derived:engine/prefill_tokens(cold-warm)")
+    _reg("serve/prefix_cache/preemptions", snap, "paging/preemptions")
 
 
 def serve_spec_decode(quick=False):
@@ -294,9 +335,11 @@ def serve_spec_decode(quick=False):
              f"tokens_per_step={st.tokens_per_step:.2f} "
              f"speedup_steps={steps0 / max(steps, 1):.2f}x "
              f"speedup_wall={dt0 / dt:.2f}x outputs_identical=True")
-        _metric(f"serve/spec_decode/{name}/accept_rate", st.acceptance_rate)
-        _metric(f"serve/spec_decode/{name}/tokens_per_step",
-                st.tokens_per_step)
+        snap = eng.metrics_snapshot()
+        _reg(f"serve/spec_decode/{name}/accept_rate", snap,
+             "spec/acceptance_rate")
+        _reg(f"serve/spec_decode/{name}/tokens_per_step", snap,
+             "spec/tokens_per_step")
 
     # analytic (sim spec mode): sub-wave decode batches commit E[tokens]
     # per step almost for free; large verify batches cross the weave
@@ -349,11 +392,14 @@ def serve_packed(quick=False):
     n_req = 6 if quick else 10
 
     def run(packed):
+        tag = "packed" if packed else "two_dispatch"
+        rec = _recorder(f"packed:{tag}")
         eng = Engine(api, mesh, params,
                      SchedulerConfig(max_batch=4, chunk_tokens=32,
                                      max_len=256, prefill_bucket=16,
                                      paged=True, spec_gamma=3,
-                                     packed=packed))
+                                     packed=packed),
+                     obs=rec, obs_track=f"packed/{tag}")
         for r in repetitive_trace(n_req, motif_len=12, repeats=3,
                                   output_len=10, vocab=cfg.vocab_size,
                                   seed=7):
@@ -361,11 +407,13 @@ def serve_packed(quick=False):
         t0 = time.perf_counter()
         done = eng.run()
         dt = time.perf_counter() - t0
-        return eng, {r.rid: r.output for r in done}, dt
+        return eng, {r.rid: r.output for r in done}, dt, rec
 
-    two, ref, _ = run(False)
-    pk, got, dt = run(True)
+    two, ref, _, rec2 = run(False)
+    pk, got, dt, recp = run(True)
     assert got == ref, "packed batching changed outputs!"
+    _assert_trace_matches(rec2, two.stats, "serve/packed two_dispatch")
+    _assert_trace_matches(recp, pk.stats, "serve/packed packed")
     assert pk.stats.weave_rate > two.stats.weave_rate, (
         f"packed weave rate {pk.stats.weave_rate:.2f} not above "
         f"two-dispatch {two.stats.weave_rate:.2f}")
@@ -379,12 +427,16 @@ def serve_packed(quick=False):
          f"forwards={pk.stats.forwards} vs {two.stats.forwards} "
          f"max_real_tokens={pk.stats.max_forward_tokens} "
          f"outputs_identical=True")
-    _metric("serve/packed/weave_rate", pk.stats.weave_rate)
-    _metric("serve/packed/weave_rate_two_dispatch", two.stats.weave_rate)
-    _metric("serve/packed/tokens_per_forward", pk.stats.tokens_per_forward)
-    _metric("serve/packed/tokens_per_forward_two_dispatch",
-            two.stats.tokens_per_forward)
-    _metric("serve/packed/max_forward_tokens", pk.stats.max_forward_tokens)
+    snap_pk, snap_two = pk.metrics_snapshot(), two.metrics_snapshot()
+    _reg("serve/packed/weave_rate", snap_pk, "engine/weave_rate")
+    _reg("serve/packed/weave_rate_two_dispatch", snap_two,
+         "engine/weave_rate")
+    _reg("serve/packed/tokens_per_forward", snap_pk,
+         "engine/tokens_per_forward")
+    _reg("serve/packed/tokens_per_forward_two_dispatch", snap_two,
+         "engine/tokens_per_forward")
+    _reg("serve/packed/max_forward_tokens", snap_pk,
+         "engine/max_forward_tokens")
 
     # analytic (sim packed mode): the crossover cell — decode batch and
     # prefill chunk each under the wave/threshold floor (no split), the
@@ -449,9 +501,11 @@ def serve_online(quick=False):
         done = eng.run()
         return eng, {r.rid: r.output for r in done}
 
-    def online(packed, deadline=None):
+    def online(packed, tag, deadline=None):
+        rec = _recorder(f"online:{tag}")
         eng = Engine(api, mesh, params, scfg(packed),
-                     jit_cache=jit_caches[packed])
+                     jit_cache=jit_caches[packed],
+                     obs=rec, obs_track=f"online/{tag}")
         srv = OnlineServer(eng, ServerConfig(
             step_cost=StepCost(base=1.0, per_token=0.05),
             expire_on_deadline=deadline is not None))
@@ -460,15 +514,19 @@ def serve_online(quick=False):
                 r.deadline = r.arrival_time + deadline
             srv.submit(r)
         done = srv.run()
-        return eng, srv, {r.rid: r.output for r in done}
+        return eng, srv, {r.rid: r.output for r in done}, rec
 
+    # the offline reference engines run UNTRACED: got == ref below is the
+    # §12 on/off identity check riding along with the dispatch-scheme one
     _, ref = offline(False)
     _, ref_pk = offline(True)
     assert ref_pk == ref, "offline packed diverged from two-dispatch!"
-    eng2, _, got2 = online(False)
-    engp, srvp, gotp = online(True)
+    eng2, _, got2, rec2 = online(False, "two_dispatch")
+    engp, srvp, gotp, recp = online(True, "packed")
     assert got2 == ref, "online two-dispatch changed emitted tokens!"
     assert gotp == ref, "online packed changed emitted tokens!"
+    _assert_trace_matches(rec2, eng2.stats, "serve/online two_dispatch")
+    _assert_trace_matches(recp, engp.stats, "serve/online packed")
     lat = engp.stats.latency.summary()
     _row("serve/online", srvp.clock * 1e6 / max(engp.stats.steps, 1),
          f"goodput={lat['goodput']:.2f} ttft_p50={lat['ttft_p50']:.2f} "
@@ -476,23 +534,27 @@ def serve_online(quick=False):
          f"weave_rate={engp.stats.weave_rate:.2f} "
          f"weave_rate_two_dispatch={eng2.stats.weave_rate:.2f} "
          f"outputs_identical=True")
-    _metric("serve/online/goodput", lat["goodput"])
-    _metric("serve/online/ttft_p50", lat["ttft_p50"])
-    _metric("serve/online/tpot_p50", lat["tpot_p50"])
-    _metric("serve/online/e2e_p99", lat["e2e_p99"])
-    _metric("serve/online/weave_rate", engp.stats.weave_rate)
-    _metric("serve/online/weave_rate_two_dispatch", eng2.stats.weave_rate)
+    snapp, snap2 = engp.metrics_snapshot(), eng2.metrics_snapshot()
+    _reg("serve/online/goodput", snapp, "latency/goodput")
+    _reg("serve/online/ttft_p50", snapp, "latency/ttft/p50")
+    _reg("serve/online/tpot_p50", snapp, "latency/tpot/p50")
+    _reg("serve/online/e2e_p99", snapp, "latency/e2e/p99")
+    _reg("serve/online/weave_rate", snapp, "engine/weave_rate")
+    _reg("serve/online/weave_rate_two_dispatch", snap2,
+         "engine/weave_rate")
 
     # tight e2e deadlines under the same load: some requests expire (their
     # blocks/prefix refs released mid-flight), goodput drops below 1 —
     # deterministic virtual-time counters, gated like the rest
-    engd, srvd, _ = online(True, deadline=14.0)
+    engd, srvd, _, recd = online(True, "slo", deadline=14.0)
+    _assert_trace_matches(recd, engd.stats, "serve/online slo")
     latd = engd.stats.latency.summary()
     _row("serve/online/slo", srvd.clock * 1e6 / max(engd.stats.steps, 1),
          f"goodput={latd['goodput']:.2f} expired={engd.stats.expired} "
          f"completed={engd.stats.completed}")
-    _metric("serve/online/slo_goodput", latd["goodput"])
-    _metric("serve/online/slo_expired", engd.stats.expired)
+    snapd = engd.metrics_snapshot()
+    _reg("serve/online/slo_goodput", snapd, "latency/goodput")
+    _reg("serve/online/slo_expired", snapd, "engine/expired")
 
     # analytic (sim online mode): the offered-load window where the packed
     # iteration crosses the split floor but the two-dispatch halves don't
@@ -552,13 +614,13 @@ def serve_cluster(quick=False):
 
     jit_cache = {}
 
-    def engine(max_batch=16, chunk=64):
+    def engine(max_batch=16, chunk=64, obs=None):
         return Engine(api, mesh, params,
                       SchedulerConfig(max_batch=max_batch,
                                       chunk_tokens=chunk, max_len=96,
                                       prefill_bucket=16, paged=True,
                                       block_size=8, packed=True),
-                      jit_cache=jit_cache)
+                      jit_cache=jit_cache, obs=obs)
 
     def single_ref(trace):
         eng = engine()
@@ -575,7 +637,7 @@ def serve_cluster(quick=False):
         return poisson_arrivals(t, rate=0.5, seed=5)
 
     ref = single_ref(affinity_trace)
-    summaries = {}
+    summaries, cs_aff = {}, None
     for router in ("round_robin", "least_loaded", "prefix_affinity"):
         reps = [Replica(f"r{i}", engine()) for i in range(3)]
         cs = ClusterServer(reps, ClusterConfig(router=router))
@@ -585,6 +647,8 @@ def serve_cluster(quick=False):
         assert got == ref, f"cluster ({router}) changed outputs!"
         cs.check_quiescent()
         summaries[router] = cs.summary()
+        if router == "prefix_affinity":
+            cs_aff = cs
     aff = summaries["prefix_affinity"]["affinity_hit_rate"]
     assert aff > 0, "prefix_affinity never found a hot block"
 
@@ -600,7 +664,8 @@ def serve_cluster(quick=False):
 
     ref2 = single_ref(load_trace)
 
-    mono = [Replica(f"m{i}", engine()) for i in range(3)]
+    rec_m = _recorder("cluster:mono")
+    mono = [Replica(f"m{i}", engine(obs=rec_m)) for i in range(3)]
     cs_m = ClusterServer(mono, ClusterConfig(router="round_robin"))
     for r in load_trace():
         cs_m.submit(r)
@@ -608,12 +673,19 @@ def serve_cluster(quick=False):
         "monolithic fleet changed outputs!"
     cs_m.check_quiescent()
     mono_fwd = sum(r.engine.stats.forwards for r in mono)
-    mono_weave = (sum(r.engine.stats.weave_forwards for r in mono)
-                  / max(mono_fwd, 1))
+    mono_wv = sum(r.engine.stats.weave_forwards for r in mono)
+    mono_weave = mono_wv / max(mono_fwd, 1)
+    from repro.obs import weave_counts_from_trace
+    wm, nm = weave_counts_from_trace(rec_m)
+    assert (wm, nm) == (mono_wv, mono_fwd), (
+        f"serve/cluster mono fleet: trace weave counts ({wm}/{nm}) != "
+        f"fleet counters ({mono_wv}/{mono_fwd})")
 
-    disagg = [Replica("p0", engine(), role="prefill"),
-              Replica("p1", engine(), role="prefill"),
-              Replica("d0", engine(max_batch=48), role="decode")]
+    rec_d = _recorder("cluster:disagg")
+    disagg = [Replica("p0", engine(obs=rec_d), role="prefill"),
+              Replica("p1", engine(obs=rec_d), role="prefill"),
+              Replica("d0", engine(max_batch=48, obs=rec_d),
+                      role="decode")]
     t0 = time.perf_counter()
     cs_d = ClusterServer(disagg, ClusterConfig(router="round_robin"))
     for r in load_trace():
@@ -624,6 +696,13 @@ def serve_cluster(quick=False):
     cs_d.check_quiescent()
     sd = cs_d.summary()
     d0 = disagg[2].engine.stats
+    _assert_trace_matches(rec_d, d0, "serve/cluster d0", track="d0")
+    wd, nd = weave_counts_from_trace(rec_d)
+    dis_fwd = sum(r.engine.stats.forwards for r in disagg)
+    dis_wv = sum(r.engine.stats.weave_forwards for r in disagg)
+    assert (wd, nd) == (dis_wv, dis_fwd), (
+        f"serve/cluster disagg fleet: trace weave counts ({wd}/{nd}) != "
+        f"fleet counters ({dis_wv}/{dis_fwd})")
     assert sd["migrations"] == n_req, \
         f"expected {n_req} migrations, got {sd['migrations']}"
     assert sd["decode_fleet/weave_rate"] > mono_weave, (
@@ -641,14 +720,20 @@ def serve_cluster(quick=False):
          f"import_shared_blocks="
          f"{disagg[2].engine.block_mgr.stats.import_shared_blocks} "
          f"outputs_identical=True")
-    _metric("serve/cluster/affinity_hit_rate", aff)
-    _metric("serve/cluster/migrations", sd["migrations"])
-    _metric("serve/cluster/mono_fleet_weave_rate", mono_weave)
-    _metric("serve/cluster/decode_fleet_weave_rate",
-            sd["decode_fleet/weave_rate"])
-    _metric("serve/cluster/p0_weave_rate", sd["p0/weave_rate"])
-    _metric("serve/cluster/p1_weave_rate", sd["p1/weave_rate"])
-    _metric("serve/cluster/d0_tokens_per_forward", d0.tokens_per_forward)
+    snap_aff = cs_aff.metrics_snapshot()
+    snap_d = cs_d.metrics_snapshot()
+    _reg("serve/cluster/affinity_hit_rate", snap_aff,
+         "summary/affinity_hit_rate")
+    _reg("serve/cluster/migrations", snap_d, "summary/migrations")
+    _metric("serve/cluster/mono_fleet_weave_rate", mono_weave,
+            source="derived:engine/weave_forwards over engine/forwards "
+                   "(mono fleet aggregate)")
+    _reg("serve/cluster/decode_fleet_weave_rate", snap_d,
+         "summary/decode_fleet/weave_rate")
+    _reg("serve/cluster/p0_weave_rate", snap_d, "summary/p0/weave_rate")
+    _reg("serve/cluster/p1_weave_rate", snap_d, "summary/p1/weave_rate")
+    _reg("serve/cluster/d0_tokens_per_forward", snap_d,
+         "summary/d0/tokens_per_forward")
 
     # analytic (sim cluster mode): the total-offered-load window where the
     # disaggregated decode fleet's merged batches weave while a monolithic
@@ -778,7 +863,13 @@ def main() -> None:
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write the deterministic serving metrics as JSON "
                         "(compared against benchmarks/baseline.json by "
-                        "scripts/check_bench.py)")
+                        "scripts/check_bench.py), with a __provenance__ "
+                        "map recording each metric's registry source")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="export the serve benchmarks' merged Chrome-trace/"
+                        "Perfetto JSON (inspect or --validate it with "
+                        "scripts/trace_view.py; load at "
+                        "https://ui.perfetto.dev)")
     args = p.parse_args()
     figs = _select_figs(args.only)
     print("name,us_per_call,derived")
@@ -792,11 +883,23 @@ def main() -> None:
             import traceback
             traceback.print_exc(file=sys.stderr)
     if args.json:
+        payload = dict(_METRICS)
+        payload["__provenance__"] = dict(_PROVENANCE)
         with open(args.json, "w") as f:
-            json.dump(_METRICS, f, indent=2, sort_keys=True)
+            json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {len(_METRICS)} metrics to {args.json}",
               file=sys.stderr)
+    if args.trace:
+        if _RECORDERS:
+            from repro.obs import export_chrome_trace
+            doc = export_chrome_trace(_RECORDERS, path=args.trace)
+            print(f"wrote trace ({len(doc['traceEvents'])} events, "
+                  f"{len(_RECORDERS)} recorders) to {args.trace}",
+                  file=sys.stderr)
+        else:
+            print("no trace recorded (no serve benchmark ran)",
+                  file=sys.stderr)
     if args.strict and errors:
         sys.exit(1)
 

@@ -15,6 +15,11 @@ Compares the deterministic serving metrics a benchmark run wrote with
 * every shared metric must be within a relative tolerance (default ±15%);
   a zero baseline must stay zero (these are counters — preemptions
   appearing out of nowhere IS a regression).
+* when the run carries a ``__provenance__`` map (metric -> source,
+  written by benchmarks/run.py), every gated key must originate from a
+  metrics-registry ``snapshot()`` (source ``registry`` or ``derived``,
+  DESIGN.md §12) — an ``adhoc`` metric is an orphan the observability
+  layer cannot vouch for, and fails with its name listed.
 
     python scripts/check_bench.py BENCH_serve.json \
         [--baseline benchmarks/baseline.json] [--tol 0.15] [--allow-extra]
@@ -24,6 +29,30 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+# reserved key in the metrics JSON: {metric: source} map, never a metric
+PROVENANCE_KEY = "__provenance__"
+
+# sources the registry can vouch for: a snapshot key copied verbatim, or
+# a value computed from snapshot keys (recorded as derived:<expr>)
+_REGISTRY_SOURCES = ("registry", "derived")
+
+
+def provenance_failures(prov: dict | None, base: dict) -> list[str]:
+    """Every baseline-gated key must come from a registry snapshot.
+
+    ``prov`` is the run's ``__provenance__`` map; None (a pre-provenance
+    metrics file) skips the check for backward compatibility."""
+    if prov is None:
+        return []
+    orphans = sorted(
+        k for k in base
+        if not str(prov.get(k, "adhoc")).startswith(_REGISTRY_SOURCES))
+    if not orphans:
+        return []
+    return [f"{len(orphans)} gated metric(s) not sourced from a metrics-"
+            f"registry snapshot (orphans): " + ", ".join(
+                f"{k} [{prov.get(k, 'missing')}]" for k in orphans)]
 
 
 def keyset_failures(cur: dict, base: dict,
@@ -68,9 +97,11 @@ def compare(cur: dict, base: dict, tol: float) -> list[str]:
 
 
 def run_checks(cur: dict, base: dict, tol: float,
-               allow_extra: bool = False) -> list[str]:
+               allow_extra: bool = False,
+               provenance: dict | None = None) -> list[str]:
     return (keyset_failures(cur, base, allow_extra=allow_extra)
-            + compare(cur, base, tol))
+            + compare(cur, base, tol)
+            + provenance_failures(provenance, base))
 
 
 def main() -> None:
@@ -91,8 +122,11 @@ def main() -> None:
         cur = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
+    prov = cur.pop(PROVENANCE_KEY, None)
+    base.pop(PROVENANCE_KEY, None)
 
-    failures = run_checks(cur, base, args.tol, allow_extra=args.allow_extra)
+    failures = run_checks(cur, base, args.tol, allow_extra=args.allow_extra,
+                          provenance=prov)
     if failures:
         print(f"\n{len(failures)} check(s) failed:", file=sys.stderr)
         for f_ in failures:

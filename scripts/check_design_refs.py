@@ -31,7 +31,8 @@ CITE_RE = re.compile(r"DESIGN(?:\.md)?\s+§(\d+)\b")
 # roots scanned for citation *resolution* (anything citing DESIGN.md)
 SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
 # packages whose every module must *carry* a citation (coverage rule)
-COVERED_PACKAGES = ("src/repro/runtime", "src/repro/core")
+COVERED_PACKAGES = ("src/repro/runtime", "src/repro/core",
+                    "src/repro/obs")
 
 
 def parse_headings(design_text: str) -> set:

@@ -1,0 +1,154 @@
+#!/usr/bin/env python
+"""Inspect / validate an exported Chrome-trace JSON (DESIGN.md §12).
+
+    python scripts/trace_view.py BENCH_trace.json              # summary
+    python scripts/trace_view.py BENCH_trace.json --validate   # CI gate
+    python scripts/trace_view.py BENCH_trace.json --request online7
+
+Summary mode prints, per engine track: step/forward span counts, the
+trace-derived weave rate (weave forwards / forwards, recomputed from the
+per-forward attribution records — the same number `EngineStats.weave_rate`
+reports), and the estimated compute / comm / overlapped virtual-time
+totals from the §10 sim roofline.  ``--request`` walks one request's
+lifecycle thread event by event (arrival → ... → terminal) including
+every forward step that touched it.  ``--validate`` runs the full schema
+check (``repro.obs.validate_chrome_trace``) and exits non-zero on any
+failure — the CI bench job runs this on the quick-sweep trace.
+
+The trace itself loads in the Perfetto UI: https://ui.perfetto.dev.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.trace import TERMINAL_PHASES, validate_chrome_trace  # noqa: E402
+
+
+def _tracks(doc: dict):
+    """pid -> process name, (pid, tid) -> thread name."""
+    procs, threads = {}, {}
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") != "M":
+            continue
+        if ev["name"] == "process_name":
+            procs[ev["pid"]] = ev["args"]["name"]
+        elif ev["name"] == "thread_name":
+            threads[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+    return procs, threads
+
+
+def summarize(doc: dict) -> None:
+    procs, _ = _tracks(doc)
+    per = defaultdict(lambda: {"steps": 0, "forwards": 0, "weave": 0,
+                               "compute": 0.0, "comm": 0.0,
+                               "overlapped": 0.0, "by_reason": defaultdict(int)})
+    requests = defaultdict(list)
+    for ev in doc["traceEvents"]:
+        ph, cat = ev.get("ph"), ev.get("cat")
+        if ph == "X" and cat == "step":
+            per[procs.get(ev["pid"], ev["pid"])]["steps"] += 1
+        elif ph == "X" and cat == "forward":
+            t = per[procs.get(ev["pid"], ev["pid"])]
+            a = ev.get("args", {})
+            t["forwards"] += 1
+            t["weave"] += int(bool(a.get("weave")))
+            t["compute"] += a.get("est_compute", 0.0)
+            t["comm"] += a.get("est_comm", 0.0)
+            t["overlapped"] += a.get("est_overlapped", 0.0)
+            t["by_reason"][a.get("reason", "?")] += 1
+        elif ph == "i" and cat == "request":
+            requests[(ev["pid"], ev["tid"])].append(ev["name"])
+
+    for name in sorted(per):
+        t = per[name]
+        rate = t["weave"] / t["forwards"] if t["forwards"] else 0.0
+        print(f"track {name}: {t['steps']} steps, {t['forwards']} forwards, "
+              f"weave_rate={rate:.4f}")
+        reasons = ", ".join(f"{k}={v}" for k, v in
+                            sorted(t["by_reason"].items()))
+        print(f"  decisions: {reasons}")
+        print(f"  est virtual time: compute={t['compute']:.6g} "
+              f"comm={t['comm']:.6g} overlapped={t['overlapped']:.6g}")
+    n_term = sum(1 for phases in requests.values()
+                 if any(p in TERMINAL_PHASES for p in phases))
+    print(f"requests: {len(requests)} lifecycle threads, "
+          f"{n_term} reached a terminal phase")
+
+
+def show_request(doc: dict, rid: str) -> int:
+    procs, threads = _tracks(doc)
+    want = f"req {rid}"
+    key = next((k for k, v in threads.items() if v == want), None)
+    if key is None:
+        names = sorted(v[4:] for v in threads.values())
+        print(f"no request {rid!r}; known rids: {', '.join(names)}",
+              file=sys.stderr)
+        return 1
+    pid, tid = key
+    print(f"request {rid} lifecycle:")
+    for ev in doc["traceEvents"]:
+        if (ev.get("pid"), ev.get("tid")) != (pid, tid):
+            continue
+        if ev.get("ph") == "i" and ev.get("cat") == "request":
+            extra = {k: v for k, v in ev.get("args", {}).items()
+                     if v is not None}
+            print(f"  t={ev['ts'] / 1e6:10.4f}  {ev['name']:<15} {extra}")
+    # every forward span whose step committed tokens for this rid is not
+    # tagged per-rid (packed forwards are shared); show the weave decision
+    # log of all forwards instead, time-interleaved with the lifecycle
+    print(f"\nweave decisions while {rid} was live (all tracks):")
+    first = min((ev["ts"] for ev in doc["traceEvents"]
+                 if (ev.get("pid"), ev.get("tid")) == (pid, tid)
+                 and "ts" in ev), default=0.0)
+    last = max((ev["ts"] for ev in doc["traceEvents"]
+                if (ev.get("pid"), ev.get("tid")) == (pid, tid)
+                and "ts" in ev), default=0.0)
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") != "X" or ev.get("cat") != "forward":
+            continue
+        if not (first <= ev["ts"] <= last):
+            continue
+        a = ev.get("args", {})
+        track = procs.get(ev["pid"], ev["pid"])
+        print(f"  t={ev['ts'] / 1e6:10.4f}  {track:<10} {ev['name']:<16} "
+              f"weave={str(bool(a.get('weave'))):<5} "
+              f"reason={a.get('reason', '?'):<16} tokens={a.get('tokens')} "
+              f"ovl={a.get('est_overlapped', 0.0):.3g}")
+    return 0
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("trace", help="Chrome-trace JSON from export_chrome_trace")
+    p.add_argument("--validate", action="store_true",
+                   help="schema + invariant check; non-zero exit on failure")
+    p.add_argument("--request", default=None, metavar="RID",
+                   help="walk one request's lifecycle thread")
+    args = p.parse_args()
+    with open(args.trace) as f:
+        doc = json.load(f)
+
+    if args.validate:
+        fails = validate_chrome_trace(doc)
+        if fails:
+            print(f"{len(fails)} validation failure(s):", file=sys.stderr)
+            for msg in fails:
+                print(f"  {msg}", file=sys.stderr)
+            return 1
+        n = len(doc.get("traceEvents", []))
+        print(f"trace valid: {n} events")
+        return 0
+    if args.request is not None:
+        return show_request(doc, args.request)
+    summarize(doc)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

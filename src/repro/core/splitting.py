@@ -17,6 +17,7 @@ across the TP group.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Optional, Tuple
 
@@ -65,10 +66,47 @@ def split_sizes_for_batch(
     (paper: TokenWeave is bypassed below ~1K tokens; the fused kernel is
     still used unsplit).
     """
-    if n_tokens < max(min_tokens, 2 * unit):
-        return None
+    return split_decision(n_tokens, unit=unit, min_tokens=min_tokens,
+                          row_multiple=row_multiple).split
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitDecision:
+    """Reasoned split decision (the trace-attribution record's core,
+    DESIGN.md §12): the split chosen — or None plus WHY not.
+
+    reasons: ``split`` (weave fires), ``below_min_tokens`` (under the
+    paper's ~1K-token bypass threshold), ``below_wave_floor`` (enough
+    tokens nominally, but a cut could not avoid adding a wave — fewer
+    than two full tile units at the effective quantum)."""
+    split: Optional[Tuple[int, int]]
+    reason: str
+    n_tokens: int
+    unit: int                 # effective wave quantum (lcm w/ row_multiple)
+    min_tokens: int
+
+
+def split_decision(
+    n_tokens: int,
+    *,
+    unit: int,
+    min_tokens: int,
+    row_multiple: int = 1,
+) -> SplitDecision:
+    """``split_sizes_for_batch`` with the refusal reason attached —
+    identical decision, used by the observability layer (DESIGN.md §12)
+    to explain every weave/no-weave call per forward step."""
     eff_unit = math.lcm(unit, max(row_multiple, 1))
-    return smart_split(n_tokens, eff_unit)
+    if n_tokens < min_tokens:
+        return SplitDecision(None, "below_min_tokens", n_tokens, eff_unit,
+                             min_tokens)
+    if n_tokens < 2 * unit:
+        return SplitDecision(None, "below_wave_floor", n_tokens, eff_unit,
+                             min_tokens)
+    split = smart_split(n_tokens, eff_unit)
+    return SplitDecision(split, "split" if split is not None
+                         else "below_wave_floor", n_tokens, eff_unit,
+                         min_tokens)
 
 
 def packed_split(

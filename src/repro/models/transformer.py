@@ -39,7 +39,7 @@ from jax import lax
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import fused_collectives as fc
-from repro.core.splitting import packed_split, split_sizes_for_batch
+from repro.core.splitting import split_decision
 from repro.distributed.context import CommCtx
 from repro.layers import attention as A
 from repro.layers import embedding as E
@@ -323,22 +323,48 @@ def _cache_prefix(cache_layer):
 # full forward
 # --------------------------------------------------------------------------
 
-def _decide_split(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
-                  decode: bool, packed: bool = False
-                  ) -> Optional[Tuple[int, int]]:
-    """Static (trace-time) TokenWeave split decision.
+@dataclasses.dataclass(frozen=True)
+class WeaveInfo:
+    """Full weave decision for one forward dispatch: the split (in the
+    dispatch's native axis units), WHY it was or wasn't taken, and the
+    parameters the decision saw — the host-side record the observability
+    layer attaches to every forward span (DESIGN.md §12)."""
+    weave: bool
+    split: Optional[Tuple[int, int]]
+    reason: str   # split | weave_disabled | paged_pool_unsplit |
+    #               below_min_tokens | below_wave_floor
+    axis: str     # packed | batch | seq
+    threshold: int  # configured tokenweave_min_tokens (tokens)
+    unit: int       # effective wave quantum the decision used
+
+
+def weave_decision_info(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
+                        decode: bool = False, packed: bool = False,
+                        paged_pool: bool = False) -> WeaveInfo:
+    """Host-side mirror of the trace-time weave split decision (pure int
+    math), with the refusal reason attached.
 
     prefill/train: split along the sequence dim (all rows cut at the same
     position — rectangular shapes); decode: split along the batch dim;
     packed: split along the flat packed token axis (b == 1), so the
     threshold sees the true combined iteration size (DESIGN.md §6).
-    Returns per-dim split sizes or None.
+    ``paged_pool`` marks a non-packed paged decode/verify dispatch, which
+    always runs unsplit (a batch split would fork the shared pool,
+    DESIGN.md §7); packed paged steps thread the pool sequentially
+    through the splits and CAN weave.
     """
+    thr = pcfg.tokenweave_min_tokens
     if not pcfg.tokenweave:
-        return None
+        return WeaveInfo(False, None, "weave_disabled", "packed" if packed
+                         else ("batch" if decode else "seq"), thr, 0)
+    if paged_pool and not packed:
+        return WeaveInfo(False, None, "paged_pool_unsplit",
+                         "batch" if decode else "seq", thr, 0)
     if packed:
-        return packed_split(b * s, unit=pcfg.split_unit_for(tp),
-                            min_tokens=pcfg.tokenweave_min_tokens)
+        d = split_decision(b * s, unit=pcfg.split_unit_for(tp),
+                           min_tokens=thr)
+        return WeaveInfo(d.split is not None, d.split, d.reason, "packed",
+                         thr, d.unit)
     if decode:
         unit = max(tp, 8)
         if s > 1:
@@ -346,33 +372,34 @@ def _decide_split(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
             # tokens, so the paper's token threshold converts to rows —
             # this is exactly how spec decoding pushes decode iterations
             # across tokenweave_min_tokens (DESIGN.md §8)
-            min_rows = max(2 * unit, -(-pcfg.tokenweave_min_tokens // s))
-            return split_sizes_for_batch(b, unit=unit, min_tokens=min_rows,
-                                         row_multiple=1)
-        return split_sizes_for_batch(b, unit=unit, min_tokens=2 * unit,
-                                     row_multiple=1)
-    unit = pcfg.split_unit_for(tp)
-    split_tokens = split_sizes_for_batch(
-        b * s, unit=unit, min_tokens=pcfg.tokenweave_min_tokens,
-        row_multiple=b)
-    if split_tokens is None:
-        return None
-    return split_tokens[0] // b, split_tokens[1] // b  # seq-dim split
+            min_rows = max(2 * unit, -(-thr // s))
+            d = split_decision(b, unit=unit, min_tokens=min_rows)
+        else:
+            d = split_decision(b, unit=unit, min_tokens=2 * unit)
+        return WeaveInfo(d.split is not None, d.split, d.reason, "batch",
+                         thr, d.unit)
+    d = split_decision(b * s, unit=pcfg.split_unit_for(tp), min_tokens=thr,
+                       row_multiple=b)
+    split = None if d.split is None else (d.split[0] // b, d.split[1] // b)
+    return WeaveInfo(split is not None, split, d.reason, "seq", thr, d.unit)
+
+
+def _decide_split(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
+                  decode: bool, packed: bool = False
+                  ) -> Optional[Tuple[int, int]]:
+    """Static (trace-time) TokenWeave split decision (per-dim sizes or
+    None) — thin view over ``weave_decision_info``."""
+    return weave_decision_info(b, s, tp=tp, pcfg=pcfg, decode=decode,
+                               packed=packed).split
 
 
 def weave_decision(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
                    decode: bool = False, packed: bool = False,
                    paged_pool: bool = False) -> bool:
-    """Host-side mirror of the trace-time weave split decision (pure int
-    math — the engine uses it to report weave-activation rates without
-    re-tracing).  ``paged_pool`` marks a non-packed paged decode/verify
-    dispatch, which always runs unsplit (a batch split would fork the
-    shared pool, DESIGN.md §7); packed paged steps thread the pool
-    sequentially through the splits and CAN weave."""
-    if paged_pool and not packed:
-        return False
-    return _decide_split(b, s, tp=tp, pcfg=pcfg, decode=decode,
-                         packed=packed) is not None
+    """Boolean view of ``weave_decision_info`` (the engine's legacy
+    weave-activation predicate)."""
+    return weave_decision_info(b, s, tp=tp, pcfg=pcfg, decode=decode,
+                               packed=packed, paged_pool=paged_pool).weave
 
 
 def _comm_ctx(pcfg: ParallelConfig, cfg: ModelConfig, t_local: int,

@@ -1,0 +1,33 @@
+"""Weave-aware observability layer (DESIGN.md §12).
+
+Three pieces, all deterministic (virtual-clock time only, never wall
+clock) and all zero-cost when tracing is off:
+
+* ``metrics``      — typed registry (counters / gauges / histograms with
+                     labels) that ``Engine``, ``OnlineServer`` and
+                     ``ClusterServer`` publish through; ``snapshot()``
+                     feeds the CI-gated benchmark metrics.
+* ``trace``        — ``TraceRecorder`` structured events + nested spans on
+                     the deterministic virtual clock, exported as
+                     Chrome-trace / Perfetto JSON
+                     (``export_chrome_trace``), one track per replica plus
+                     a per-request lifecycle track.
+* ``attribution``  — the per-forward weave-decision record: tokens seen,
+                     threshold, split chosen, overlap method, and the
+                     §10 sim-roofline estimate of compute / comm /
+                     overlapped virtual time, so ``EngineStats.weave_rate``
+                     is derivable from the trace (DESIGN.md §12).
+"""
+from repro.obs.attribution import Attributor, WeaveAttribution
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               percentile)
+from repro.obs.trace import (TERMINAL_PHASES, TraceRecorder,
+                             export_chrome_trace, validate_chrome_trace,
+                             weave_counts_from_trace)
+
+__all__ = [
+    "Attributor", "WeaveAttribution",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "percentile",
+    "TERMINAL_PHASES", "TraceRecorder", "export_chrome_trace",
+    "validate_chrome_trace", "weave_counts_from_trace",
+]

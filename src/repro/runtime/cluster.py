@@ -49,6 +49,7 @@ import bisect
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs.metrics import MetricsRegistry
 from repro.runtime.engine import Engine, Handoff
 from repro.runtime.prefix_cache import chain_hashes
 from repro.runtime.requests import Request, State
@@ -78,12 +79,37 @@ class ClusterConfig:
     max_steps: int = 1_000_000        # total engine steps across the fleet
 
 
-@dataclasses.dataclass
 class ClusterStats:
-    migrations_started: int = 0       # handoffs dispatched onto the wire
-    affinity_routed: int = 0          # prefix_affinity routing decisions
-    affinity_hits: int = 0            # ... that found >= 1 hot block
-    cancelled: int = 0
+    """Thin read view over the cluster's MetricsRegistry (``cluster/*``
+    counters, DESIGN.md §12) — same attribute names the old dataclass
+    exposed, now always equal to what ``metrics_snapshot()`` exports."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry())
+        r = self.registry
+        # handoffs dispatched onto the wire
+        self._migrations_started = r.counter("cluster/migrations_started")
+        # prefix_affinity routing decisions / ... that found >= 1 hot block
+        self._affinity_routed = r.counter("cluster/affinity_routed")
+        self._affinity_hits = r.counter("cluster/affinity_hits")
+        self._cancelled = r.counter("cluster/cancelled")
+
+    @property
+    def migrations_started(self) -> int:
+        return self._migrations_started.value
+
+    @property
+    def affinity_routed(self) -> int:
+        return self._affinity_routed.value
+
+    @property
+    def affinity_hits(self) -> int:
+        return self._affinity_hits.value
+
+    @property
+    def cancelled(self) -> int:
+        return self._cancelled.value
 
     @property
     def affinity_hit_rate(self) -> float:
@@ -104,6 +130,10 @@ class Replica:
         self.name = name
         self.engine = engine
         self.role = role
+        # one recorder, one track per replica (DESIGN.md §12): claim the
+        # engine's default track name so fleet traces don't collide
+        if engine.obs is not None and engine.obs_track == "engine":
+            engine.obs_track = name
         # an explicit per-replica cost (heterogeneous fleet) wins over the
         # cluster-wide default; None is filled in by ClusterServer
         self.step_cost = step_cost
@@ -138,6 +168,10 @@ class Replica:
         while self._pending and self._pending[0][0] <= self.clock:
             _, _, req = self._pending.pop(0)
             req.admit_time = self.clock
+            if self.engine.obs is not None:
+                self.engine.obs.request_event(
+                    req.rid, "arrival", ts=req.arrival_time,
+                    args={"replica": self.name, "deadline": req.deadline})
             self.engine.add_request(req)
         # adoptions are head-of-line like paged admission: if the oldest
         # migrated request cannot land (no slot / no blocks), younger ones
@@ -151,6 +185,10 @@ class Replica:
     def tick(self) -> bool:
         """Admit due events, run ONE engine step, advance the clock by its
         cost.  Returns False when the engine made no progress."""
+        if self.engine.obs is not None:
+            # this replica owns the recorder's clock for the duration of
+            # its tick: admission/adoption/step events stamp at its time
+            self.engine.obs.sync(self.clock)
         self._admit_due()
         before = self.engine.stats.forward_tokens
         if not self.engine.step():
@@ -217,9 +255,9 @@ def route_prefix_affinity(cluster: "ClusterServer", req: Request,
     hashes = chain_hashes(req.prompt, bs)
     hits = [c.prefix_hit_blocks(hashes) for c in cands]
     best = max(hits)
-    cluster.stats.affinity_routed += 1
+    cluster.stats._affinity_routed.inc()
     if best > 0:
-        cluster.stats.affinity_hits += 1
+        cluster.stats._affinity_hits.inc()
     pool = [(i, c) for i, c in enumerate(cands) if hits[i] == best]
     return min(pool, key=lambda ic: (ic[1].load(), ic[0]))[1]
 
@@ -283,7 +321,12 @@ class ClusterServer:
             self.ingress = mixed
             self.decode_fleet = []
 
-        self.stats = ClusterStats()
+        self.metrics = MetricsRegistry()
+        self.stats = ClusterStats(self.metrics)
+        # the fleet shares ONE recorder (first traced engine wins): one
+        # lifecycle thread per rid across migrations, one track per replica
+        self.obs = next((rep.engine.obs for rep in replicas
+                         if rep.engine.obs is not None), None)
         self.requests: List[Request] = []
         self.completed: List[Request] = []
         self.aborted: List[Request] = []
@@ -337,7 +380,7 @@ class ClusterServer:
 
     def _dispatch_handoffs(self, rep: Replica) -> None:
         for h in rep.engine.take_handoffs():
-            self.stats.migrations_started += 1
+            self.stats._migrations_started.inc()
             target = self.router(self, h.req, self.decode_fleet, rep.clock)
             at = rep.clock + self.cfg.migration_cost.of(h.n_tokens)
             target.queue_adoption(at, h)
@@ -348,7 +391,7 @@ class ClusterServer:
             self.completed.append(req)
 
     def _process_cancel(self) -> None:
-        _, rid = self._cancels.pop(0)
+        t, rid = self._cancels.pop(0)
         req = self._by_rid[rid]
         if req.state == State.DONE:
             return
@@ -356,36 +399,47 @@ class ClusterServer:
         for i, (_, r_rid, _) in enumerate(self._arrivals):
             if r_rid == rid:
                 self._arrivals.pop(i)
-                self._mark_cancelled(req)
+                self._mark_cancelled(req, t)
                 return
         for rep in self.replicas:
             # 2. routed but not yet admitted
             for i, (_, p_rid, _) in enumerate(rep._pending):
                 if p_rid == rid:
                     rep._pending.pop(i)
-                    self._mark_cancelled(req)
+                    self._mark_cancelled(req, t)
                     return
             # 3. mid-migration: exporter freed at park, importer never
             #    allocated — dropping the handoff releases everything
             for i, (_, a_rid, _) in enumerate(rep._adopt):
                 if a_rid == rid:
                     rep._adopt.pop(i)
-                    self._mark_cancelled(req)
+                    self._mark_cancelled(req, t)
                     return
             # 4. owned by a replica engine (waiting or active)
             sched = rep.engine.sched
             if req in sched.waiting or any(r is req for r in sched.active):
+                if rep.engine.obs is not None:
+                    # stamp the abort's terminal event at the owning
+                    # replica's time (>= every prior event of this rid)
+                    rep.engine.obs.sync(max(rep.clock, t))
                 rep.engine.abort(req, "cancelled")
                 req.finish_time = rep.clock
-                self.stats.cancelled += 1
+                self.stats._cancelled.inc()
                 self.aborted.append(req)
                 return
         raise AssertionError(f"rid {rid} not found anywhere in the cluster")
 
-    def _mark_cancelled(self, req: Request) -> None:
+    def _mark_cancelled(self, req: Request, t: float) -> None:
+        """Cancel a request no engine owns (unrouted, pre-admission, or
+        mid-migration): the engine abort path can't emit its terminal
+        lifecycle event, so the cluster does — exactly one terminal per
+        rid either way (DESIGN.md §12)."""
         req.state = State.DONE
         req.finish_reason = "cancelled"
-        self.stats.cancelled += 1
+        self.stats._cancelled.inc()
+        if self.obs is not None:
+            self.obs.request_event(req.rid, "cancel", ts=t,
+                                   args={"reason": "cancelled"})
         self.aborted.append(req)
 
     # ------------------------------------------------------------------
@@ -475,3 +529,11 @@ class ClusterServer:
                      for r in self.decode_fleet)
             out["decode_fleet/weave_rate"] = wv / fwd if fwd else 0.0
         return out
+
+    def metrics_snapshot(self) -> Dict[str, float]:
+        """Registry flatten for the benchmark provenance gate
+        (DESIGN.md §12): ``cluster/*`` counters plus every ``summary()``
+        value synced into a ``summary/<key>`` gauge."""
+        for k, v in self.summary().items():
+            self.metrics.gauge(f"summary/{k}").set(v)
+        return self.metrics.snapshot()

@@ -54,6 +54,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.splitting import pad_to_multiple
 from repro.models import transformer as TRX
 from repro.models.build import ModelApi
+from repro.obs.attribution import Attributor, WeaveAttribution
+from repro.obs.metrics import MetricsRegistry, percentile as _percentile
+from repro.obs.trace import TraceRecorder
 from repro.runtime import kv_cache as KC
 from repro.runtime import paging as PG
 from repro.runtime import spec as SP
@@ -61,24 +64,8 @@ from repro.runtime.paging import BlockManager
 from repro.runtime.requests import Request, State
 from repro.runtime.sampler import sample
 from repro.runtime.scheduler import (PackedPlan, Scheduler, SchedulerConfig)
-from repro.runtime.spec import SpecStats
 
 
-def _percentile(xs: List[float], q: float) -> float:
-    """Linear-interpolation percentile (numpy default) over a copy —
-    deterministic, no numpy dtype surprises in JSON metrics."""
-    if not xs:
-        return 0.0
-    s = sorted(xs)
-    if len(s) == 1:
-        return float(s[0])
-    pos = (len(s) - 1) * q
-    lo = int(math.floor(pos))
-    hi = min(lo + 1, len(s) - 1)
-    return float(s[lo] + (s[hi] - s[lo]) * (pos - lo))
-
-
-@dataclasses.dataclass
 class LatencyStats:
     """Per-request serving latencies in VIRTUAL time (runtime/server.py's
     deterministic clock, DESIGN.md §10) plus SLO attainment.
@@ -88,23 +75,52 @@ class LatencyStats:
     cancellations are excluded — the client walked away, the server did
     not fail it.  ``goodput`` is the SLO-attainment fraction the paper's
     serving sections report (requests served within their deadline /
-    accountable requests)."""
-    ttft: List[float] = dataclasses.field(default_factory=list)
-    tpot: List[float] = dataclasses.field(default_factory=list)
-    e2e: List[float] = dataclasses.field(default_factory=list)
-    slo_total: int = 0
-    slo_met: int = 0
+    accountable requests).
+
+    Thin view over ``latency/*`` instruments in a MetricsRegistry
+    (DESIGN.md §12): every mutation lands in the registry, so a
+    ``snapshot()`` and this object can never disagree.  The list/int
+    attributes the old dataclass exposed are preserved as live views."""
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry())
+        self._ttft = self.registry.histogram("latency/ttft")
+        self._tpot = self.registry.histogram("latency/tpot")
+        self._e2e = self.registry.histogram("latency/e2e")
+        self._slo_total = self.registry.counter("latency/slo_total")
+        self._slo_met = self.registry.counter("latency/slo_met")
+
+    @property
+    def ttft(self) -> List[float]:
+        return self._ttft.values
+
+    @property
+    def tpot(self) -> List[float]:
+        return self._tpot.values
+
+    @property
+    def e2e(self) -> List[float]:
+        return self._e2e.values
+
+    @property
+    def slo_total(self) -> int:
+        return self._slo_total.value
+
+    @property
+    def slo_met(self) -> int:
+        return self._slo_met.value
 
     def record(self, r) -> None:
         if r.finish_reason != "cancelled":
-            self.slo_total += 1
-            self.slo_met += int(r.slo_ok)
+            self._slo_total.inc()
+            self._slo_met.inc(int(r.slo_ok))
         if r.ttft is not None:
-            self.ttft.append(r.ttft)
+            self._ttft.observe(r.ttft)
         if r.tpot is not None:
-            self.tpot.append(r.tpot)
+            self._tpot.observe(r.tpot)
         if r.e2e_latency is not None:
-            self.e2e.append(r.e2e_latency)
+            self._e2e.observe(r.e2e_latency)
 
     @property
     def goodput(self) -> float:
@@ -122,6 +138,45 @@ class LatencyStats:
         return out
 
 
+class SpecStatsView:
+    """Registry view with the ``SpecStats`` API (runtime/spec.py,
+    DESIGN.md §8) over ``spec/*`` counters."""
+
+    def __init__(self, registry: MetricsRegistry):
+        self._verify_steps = registry.counter("spec/verify_steps")
+        self._draft_proposed = registry.counter("spec/draft_proposed")
+        self._draft_accepted = registry.counter("spec/draft_accepted")
+        self._emitted = registry.counter("spec/emitted")
+
+    @property
+    def verify_steps(self) -> int:
+        return self._verify_steps.value
+
+    @property
+    def draft_proposed(self) -> int:
+        return self._draft_proposed.value
+
+    @property
+    def draft_accepted(self) -> int:
+        return self._draft_accepted.value
+
+    @property
+    def emitted(self) -> int:
+        return self._emitted.value
+
+    @property
+    def acceptance_rate(self) -> float:
+        return (self.draft_accepted / self.draft_proposed
+                if self.draft_proposed else 0.0)
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Mean committed tokens per verified sequence per engine step
+        (plain decode == 1.0 by definition)."""
+        seqs = self.emitted - self.draft_accepted
+        return self.emitted / seqs if seqs else 0.0
+
+
 @dataclasses.dataclass
 class Handoff:
     """A request parked for disaggregated prefill->decode migration
@@ -133,20 +188,76 @@ class Handoff:
     payload: dict
 
 
-@dataclasses.dataclass
 class EngineStats:
-    steps: int = 0
-    prefill_tokens: int = 0
-    decode_tokens: int = 0
-    completed: int = 0
-    cancelled: int = 0         # user-initiated aborts (online serving)
-    expired: int = 0           # deadline-expiry aborts (online serving)
-    forwards: int = 0          # model dispatches (2/iter two-dispatch peak)
-    weave_forwards: int = 0    # dispatches whose static shape fires the weave
-    forward_tokens: int = 0    # real (non-padding) tokens across dispatches
-    max_forward_tokens: int = 0  # largest REAL token count in one dispatch
-    spec: SpecStats = dataclasses.field(default_factory=SpecStats)
-    latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
+    """Thin read view over the engine's MetricsRegistry (DESIGN.md §12).
+
+    Every counter the old dataclass carried is now an ``engine/*``
+    instrument mutated by the engine through the registry; the attribute
+    names here are unchanged, read-only, and always equal to what
+    ``Engine.metrics_snapshot()`` exports."""
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry())
+        r = self.registry
+        self._steps = r.counter("engine/steps")
+        self._prefill_tokens = r.counter("engine/prefill_tokens")
+        self._decode_tokens = r.counter("engine/decode_tokens")
+        self._completed = r.counter("engine/completed")
+        self._cancelled = r.counter("engine/cancelled")
+        self._expired = r.counter("engine/expired")
+        self._forwards = r.counter("engine/forwards")
+        self._weave_forwards = r.counter("engine/weave_forwards")
+        self._forward_tokens = r.counter("engine/forward_tokens")
+        self._max_forward_tokens = r.gauge("engine/max_forward_tokens")
+        self.spec = SpecStatsView(r)
+        self.latency = LatencyStats(r)
+
+    @property
+    def steps(self) -> int:
+        return self._steps.value
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self._prefill_tokens.value
+
+    @property
+    def decode_tokens(self) -> int:
+        return self._decode_tokens.value
+
+    @property
+    def completed(self) -> int:
+        return self._completed.value
+
+    @property
+    def cancelled(self) -> int:
+        """User-initiated aborts (online serving)."""
+        return self._cancelled.value
+
+    @property
+    def expired(self) -> int:
+        """Deadline-expiry aborts (online serving)."""
+        return self._expired.value
+
+    @property
+    def forwards(self) -> int:
+        """Model dispatches (2/iter two-dispatch peak)."""
+        return self._forwards.value
+
+    @property
+    def weave_forwards(self) -> int:
+        """Dispatches whose static shape fires the weave."""
+        return self._weave_forwards.value
+
+    @property
+    def forward_tokens(self) -> int:
+        """Real (non-padding) tokens across dispatches."""
+        return self._forward_tokens.value
+
+    @property
+    def max_forward_tokens(self) -> int:
+        """Largest REAL token count in one dispatch."""
+        return int(self._max_forward_tokens.value)
 
     @property
     def weave_rate(self) -> float:
@@ -165,7 +276,9 @@ class Engine:
     def __init__(self, api: ModelApi, mesh, params, scfg: SchedulerConfig,
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
                  draft: SP.DraftProposer | None = None, seed: int = 0,
-                 jit_cache: Dict | None = None):
+                 jit_cache: Dict | None = None,
+                 obs: TraceRecorder | None = None,
+                 obs_track: str = "engine"):
         self.api = api
         self.mesh = mesh
         self.params = params
@@ -173,7 +286,16 @@ class Engine:
         self.temperature = temperature
         self.top_k = top_k
         self.top_p = top_p
-        self.stats = EngineStats()
+        self.metrics = MetricsRegistry()
+        self.stats = EngineStats(self.metrics)
+        # tracing (DESIGN.md §12): obs is None by default — every obs code
+        # path is behind an ``is not None`` guard, so tracing off costs
+        # nothing and (invariant) tracing on changes no tokens or steps
+        self.obs = obs
+        self.obs_track = obs_track
+        self._attributor = (Attributor(api.cfg, api.pcfg, api.tp)
+                            if obs is not None else None)
+        self._step_forwards: List[WeaveAttribution] = []
         self._step_count = 0
         # jit_cache may be SHARED across engines built with the same
         # (api, mesh, scfg shapes, sampling params) — e.g. the differential
@@ -245,7 +367,9 @@ class Engine:
             self.block_mgr = None
             cache = api.init_cache(scfg.max_batch, scfg.max_len)
             cspec = api.cache_specs()
-        self.sched = Scheduler(scfg, block_mgr=self.block_mgr)
+        self.sched = Scheduler(
+            scfg, block_mgr=self.block_mgr,
+            on_admit=self._obs_admit if obs is not None else None)
         # disaggregated serving (DESIGN.md §11): requests parked by
         # ``_park_for_handoff`` wait here for the cluster to migrate them
         self.handoff_ready: List[Handoff] = []
@@ -504,6 +628,30 @@ class Engine:
                     f"{self.scfg.effective_num_blocks} (rid={req.rid})")
         req.arrival_step = self._step_count
         self.sched.add(req)
+        if self.obs is not None:
+            self.obs.request_event(req.rid, "queued")
+
+    def _obs_admit(self, req: Request) -> None:
+        """Scheduler admission hook (only wired when tracing is on)."""
+        self.obs.request_event(req.rid, "admit", args={"slot": req.slot})
+
+    def metrics_snapshot(self) -> Dict[str, float]:
+        """Sync derived gauges, then flatten the registry — the
+        provenance-checked source for gated benchmark metrics
+        (benchmarks/run.py, scripts/check_bench.py; DESIGN.md §12)."""
+        m = self.metrics
+        st = self.stats
+        m.gauge("engine/weave_rate").set(st.weave_rate)
+        m.gauge("engine/tokens_per_forward").set(st.tokens_per_forward)
+        m.gauge("spec/acceptance_rate").set(st.spec.acceptance_rate)
+        m.gauge("spec/tokens_per_step").set(st.spec.tokens_per_step)
+        m.gauge("latency/goodput").set(st.latency.goodput)
+        if self.block_mgr is not None:
+            bs = self.block_mgr.stats
+            m.gauge("paging/hit_rate").set(bs.hit_rate)
+            m.gauge("paging/preemptions").set(bs.preemptions)
+            m.gauge("paging/evictions").set(bs.evictions)
+        return m.snapshot()
 
     def abort(self, req: Request, reason: str = "cancelled") -> bool:
         """Cancel a live request at ANY lifecycle point (waiting, mid-
@@ -516,9 +664,13 @@ class Engine:
             return False
         req.finish_reason = reason
         if reason == "expired":
-            self.stats.expired += 1
+            self.stats._expired.inc()
         else:
-            self.stats.cancelled += 1
+            self.stats._cancelled.inc()
+        if self.obs is not None:
+            self.obs.request_event(
+                req.rid, "expire" if reason == "expired" else "cancel",
+                args={"reason": reason})
         if req.state == State.WAITING:
             # not admitted: no slot, and (paged) no blocks — allocation
             # happens at admission; a preempted request already freed its
@@ -567,6 +719,9 @@ class Engine:
         r.slot = None
         self.handoff_ready.append(Handoff(req=r, n_tokens=n_tokens,
                                           payload=payload))
+        if self.obs is not None:
+            self.obs.request_event(r.rid, "handoff_export",
+                                   args={"n_tokens": n_tokens})
 
     def take_handoffs(self) -> List[Handoff]:
         out, self.handoff_ready = self.handoff_ready, []
@@ -607,18 +762,30 @@ class Engine:
         req.slot = free[0]
         req.arrival_step = self._step_count
         self.sched.active[req.slot] = req
+        if self.obs is not None:
+            self.obs.request_event(req.rid, "handoff_adopt",
+                                   args={"slot": req.slot})
         return True
 
     def step(self) -> bool:
         """Run one engine iteration. Returns False when idle."""
+        obs = self.obs
+        if obs is not None:
+            # offline engines self-clock one tick per step; a no-op once
+            # an external owner (server/replica) has synced.  Stamped
+            # BEFORE next_step() so admission events land at step time.
+            obs.auto(float(self._step_count))
+            self._step_forwards = []
         plan = self.sched.next_step()
         if plan is None:
             return False
         self._step_count += 1
-        self.stats.steps += 1
+        self.stats._steps.inc()
 
         if isinstance(plan, PackedPlan):
             self._run_packed(plan)
+            if obs is not None:
+                self._obs_emit_step(packed=True)
             return True
         if plan.prefill is not None:
             self._run_prefill(*plan.prefill)
@@ -627,21 +794,53 @@ class Engine:
                 self._run_verify()
             else:
                 self._run_decode()
+        if obs is not None:
+            self._obs_emit_step(packed=False)
         return True
 
+    def _obs_emit_step(self, packed: bool) -> None:
+        """Emit this iteration's step span plus one nested forward span
+        per model dispatch, carrying the weave attribution record
+        (DESIGN.md §12).  All spans start at the step's clock stamp with
+        §10 sim-roofline durations; the step span covers its longest
+        forward, so nesting holds however far the owner clock advances."""
+        obs = self.obs
+        fwds = self._step_forwards
+        t0 = obs.now
+        durs = [max(a.est_makespan, 1e-9) for a in fwds]
+        obs.complete(self.obs_track,
+                     "step/packed" if packed else "step/two_dispatch",
+                     t0, max(durs, default=1e-9), cat="step",
+                     args={"step": self._step_count, "forwards": len(fwds)})
+        for a, d in zip(fwds, durs):
+            args = a.args()
+            args["step"] = self._step_count
+            obs.complete(self.obs_track, f"forward/{a.kind}", t0, d,
+                         cat="forward", args=args)
+        self._step_forwards = []
+
     def _note_forward(self, b: int, s: int, n_real: int, *,
-                      decode: bool = False, packed: bool = False):
+                      decode: bool = False, packed: bool = False,
+                      kind: str = "prefill"):
         """Record one model dispatch: its static (b, s) shape decides the
         weave (host-side mirror of the trace-time split decision), its
-        real token count feeds tokens/forward."""
-        self.stats.forwards += 1
-        self.stats.forward_tokens += n_real
-        self.stats.max_forward_tokens = max(self.stats.max_forward_tokens,
-                                            n_real)
-        if TRX.weave_decision(b, s, tp=self.api.tp, pcfg=self.api.pcfg,
-                              decode=decode, packed=packed,
-                              paged_pool=self.paged and decode):
-            self.stats.weave_forwards += 1
+        real token count feeds tokens/forward.  The SAME decision object
+        feeds the counter and (when tracing) the trace attribution record,
+        so trace-derived weave rates match ``EngineStats.weave_rate``
+        exactly (DESIGN.md §12)."""
+        st = self.stats
+        st._forwards.inc()
+        st._forward_tokens.inc(n_real)
+        st._max_forward_tokens.set_max(n_real)
+        info = TRX.weave_decision_info(b, s, tp=self.api.tp,
+                                       pcfg=self.api.pcfg, decode=decode,
+                                       packed=packed,
+                                       paged_pool=self.paged and decode)
+        if info.weave:
+            st._weave_forwards.inc()
+        if self.obs is not None:
+            self._step_forwards.append(self._attributor.attribute(
+                info, b=b, s=s, n_real=n_real, kind=kind))
 
     def run(self, max_steps: int = 100000) -> List[Request]:
         while not self.sched.all_done() and max_steps > 0:
@@ -678,6 +877,8 @@ class Engine:
         self.block_mgr.free_request(victim.rid)
         self.block_mgr.stats.preemptions += 1
         self.sched.preempt(victim)
+        if self.obs is not None:
+            self.obs.request_event(victim.rid, "preempt")
 
     def _ensure_decode_blocks(self) -> List[Request]:
         """Grow/COW the write-target block of every DECODE request; on
@@ -720,6 +921,9 @@ class Engine:
                 r.output.append(tok)
                 r.first_token_step = self._step_count
             r.state = State.DECODE
+            if self.obs is not None:
+                self.obs.request_event(r.rid, "prefill_done",
+                                       args={"tokens": r.prefill_pos})
             self._maybe_finish(r)
             if r.state != State.DONE and r.handoff_after_prefill:
                 self._park_for_handoff(r)
@@ -727,7 +931,7 @@ class Engine:
     def _commit_decode(self, r: Request, tok: int):
         n_written = r.length  # positions [0, length-1] now in cache
         r.output.append(tok)
-        self.stats.decode_tokens += 1
+        self.stats._decode_tokens.inc()
         if self.paged and n_written % self.scfg.block_size == 0:
             # a block just filled: make it hittable for future prompts
             self.block_mgr.register_filled(
@@ -743,10 +947,10 @@ class Engine:
         base_len = r.length          # L: window wrote L-1 .. L-1+|prop|
         r.output.extend(prop[:n] + [emit])
         st = self.stats.spec
-        st.draft_proposed += len(prop)
-        st.draft_accepted += n
-        st.emitted += n + 1
-        self.stats.decode_tokens += n + 1
+        st._draft_proposed.inc(len(prop))
+        st._draft_accepted.inc(n)
+        st._emitted.inc(n + 1)
+        self.stats._decode_tokens.inc(n + 1)
         if self.paged:
             # rollback: keep exactly the blocks covering the committed
             # context (positions 0 .. L-1+n); rejected draft KV beyond
@@ -794,8 +998,8 @@ class Engine:
                                  jnp.asarray(last_idx), self._next_key())
         tok = np.asarray(tok)
         n_real = int((positions >= 0).sum())
-        self.stats.prefill_tokens += n_real
-        self._note_forward(b_sel, chunk, n_real)
+        self.stats._prefill_tokens.inc(n_real)
+        self._note_forward(b_sel, chunk, n_real, kind="prefill")
         for i, r in enumerate(group):
             self._commit_prefill(r, int(tok[i]))
 
@@ -829,7 +1033,7 @@ class Engine:
                                  jnp.asarray(tokens), jnp.asarray(positions),
                                  self._next_key())
         tok = np.asarray(tok)
-        self._note_forward(bmax, 1, len(reqs), decode=True)
+        self._note_forward(bmax, 1, len(reqs), decode=True, kind="decode")
         for r in list(reqs):
             self._commit_decode(r, int(tok[r.slot]))
 
@@ -923,9 +1127,9 @@ class Engine:
         emit = np.asarray(emit)
         self._note_forward(bmax, s_v,
                            sum(1 + len(capped[r.rid]) for r in reqs),
-                           decode=True)
+                           decode=True, kind="verify")
 
-        self.stats.spec.verify_steps += 1
+        self.stats.spec._verify_steps.inc()
         for r in list(reqs):
             self._commit_verify(r, capped[r.rid], int(n_acc[r.slot]),
                                 int(emit[r.slot]))
@@ -1021,15 +1225,15 @@ class Engine:
         n_acc, emit, self.cache = fn(*args)
         n_acc = np.asarray(n_acc)
         emit = np.asarray(emit)
-        self._note_forward(1, t, t_real, packed=True)
+        self._note_forward(1, t, t_real, packed=True, kind="packed")
 
         if any(s.kind == "verify" for s in segs):
-            self.stats.spec.verify_steps += 1
+            self.stats.spec._verify_steps.inc()
         for s in segs:
             r = s.req
             m = r.slot
             if s.kind == "prefill":
-                self.stats.prefill_tokens += s.n_tokens
+                self.stats._prefill_tokens.inc(s.n_tokens)
                 self._commit_prefill(r, int(emit[m]))
             elif s.kind == "decode":
                 self._commit_decode(r, int(emit[m]))
@@ -1054,4 +1258,8 @@ class Engine:
             self.cache = KC.reset_slots(self.cache, np.asarray([r.slot]))
         r.finish_reason = r.finish_reason or "stop"
         self.sched.finish(r, self._step_count)
-        self.stats.completed += 1
+        self.stats._completed.inc()
+        if self.obs is not None:
+            self.obs.request_event(r.rid, "finish",
+                                   args={"reason": r.finish_reason,
+                                         "tokens": len(r.output)})

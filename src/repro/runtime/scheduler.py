@@ -141,7 +141,8 @@ class PackedPlan:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig, block_mgr=None, policy=None):
+    def __init__(self, cfg: SchedulerConfig, block_mgr=None, policy=None,
+                 on_admit=None):
         self.cfg = cfg
         self.block_mgr = block_mgr          # BlockManager when cfg.paged
         self.waiting: List[Request] = []
@@ -150,6 +151,9 @@ class Scheduler:
         # pluggable priority: explicit callable wins, else the named policy
         self.policy_key = (policy if policy is not None
                            else ADMISSION_POLICIES[cfg.policy])
+        # observation-only admission hook (the engine's trace recorder,
+        # DESIGN.md §12) — fired after the request lands in its slot
+        self.on_admit = on_admit
 
     # ---- admission -------------------------------------------------------
     def add(self, req: Request):
@@ -187,6 +191,8 @@ class Scheduler:
             req.slot = slot
             req.state = State.PREFILL
             self.active[slot] = req
+            if self.on_admit is not None:
+                self.on_admit(req)
 
     # ---- preemption ------------------------------------------------------
     def preempt(self, req: Request):

@@ -133,6 +133,14 @@ class OnlineServer:
         while self._pending and self._pending[0][0] <= self.clock:
             _, _, req = self._pending.pop(0)
             req.admit_time = self.clock   # entered the engine queue
+            if self.engine.obs is not None:
+                # stamped at the true arrival instant (<= clock), BEFORE
+                # the engine's "queued" event for this rid; requests
+                # cancelled pre-arrival never reach here, so their
+                # lifecycle thread starts at the cancel itself
+                self.engine.obs.request_event(
+                    req.rid, "arrival", ts=req.arrival_time,
+                    args={"deadline": req.deadline})
             self.engine.add_request(req)
 
     def _process_cancels(self) -> None:
@@ -165,9 +173,15 @@ class OnlineServer:
             req.state = State.DONE
             req.finish_reason = reason
             if reason == "expired":
-                self.engine.stats.expired += 1
+                self.engine.stats._expired.inc()
             else:
-                self.engine.stats.cancelled += 1
+                self.engine.stats._cancelled.inc()
+            if self.engine.obs is not None:
+                # the engine never saw this request, so its abort-path
+                # terminal event cannot fire — emit it here
+                self.engine.obs.request_event(
+                    req.rid, "expire" if reason == "expired" else "cancel",
+                    args={"reason": reason, "pre_arrival": True})
             self.aborted.append(req)
             return
         self.engine.abort(req, reason)
@@ -224,6 +238,10 @@ class OnlineServer:
         eng = self.engine
         steps = 0
         while True:
+            if eng.obs is not None:
+                # the server owns the virtual clock: stamp the recorder
+                # before any lifecycle event or step span of this tick
+                eng.obs.sync(self.clock)
             self._process_cancels()
             self._expire_deadlines()
             self._admit_arrivals()

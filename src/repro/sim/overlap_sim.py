@@ -230,6 +230,39 @@ def e2e_latency(cfg: ModelConfig, mode: str, tokens: int, **kw) -> float:
     return per_layer * cfg.num_layers
 
 
+def step_attribution(cfg: ModelConfig, mode: str, tokens: int, *,
+                     tp: int = 8, ctx: Optional[int] = None,
+                     hw: Optional[HW] = None, n_layers: int = 4
+                     ) -> Dict[str, float]:
+    """Per-forward compute/comm/overlap attribution (DESIGN.md §12).
+
+    Runs the mode's schedule through the two-stream simulator and
+    decomposes the makespan into stream-busy totals:
+
+        overlapped = compute_busy + comm_busy - makespan   (clamped >= 0)
+
+    i.e. the virtual time where both streams were occupied at once — the
+    quantity TokenWeave exists to maximize.  Scaled from the simulated
+    ``n_layers`` window to the full ``cfg.num_layers`` model, matching
+    ``e2e_latency``.  This prices the per-forward weave attribution
+    record the engine attaches to trace spans (obs/attribution.py)."""
+    hw = hw or HW()
+    ctx = ctx if ctx is not None else tokens
+    ops = layer_ops(cfg, mode, tokens, ctx, tp, hw, n_layers=n_layers)
+    makespan, _ = simulate(ops)
+    busy = {"compute": 0.0, "comm": 0.0}
+    for op in ops:
+        busy[op.stream] += op.duration
+    scale = cfg.num_layers / n_layers
+    return {
+        "compute": busy["compute"] * scale,
+        "comm": busy["comm"] * scale,
+        "overlapped": max(busy["compute"] + busy["comm"] - makespan, 0.0)
+        * scale,
+        "makespan": makespan * scale,
+    }
+
+
 # --------------------------------------------------------------------------
 # speculative decoding (runtime/spec.py, DESIGN.md §8): decode modeled as a
 # gamma+1-token verify batch per sequence

@@ -1,7 +1,9 @@
 """Unit tests for the CI benchmark-regression gate
 (scripts/check_bench.py): key-set disagreement must fail with the full
-list of missing/extra metric names, zero baselines must stay zero, and
-tolerance breaches must be reported per metric."""
+list of missing/extra metric names, zero baselines must stay zero,
+tolerance breaches must be reported per metric, and — when the run
+carries a ``__provenance__`` map (DESIGN.md §12) — every gated key must
+originate from a metrics-registry snapshot."""
 import importlib.util
 import os
 
@@ -60,3 +62,40 @@ def test_tolerance_breach_reports_rel_diff():
     failures = check_bench.run_checks(cur, BASE, tol=0.15)
     assert len(failures) == 1
     assert "serve/a" in failures[0] and "rel_diff" in failures[0]
+
+
+# --------------------------------------------------------------------------
+# provenance gate (DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+def test_registry_and_derived_provenance_pass():
+    prov = {"serve/a": "registry:engine/weave_rate",
+            "serve/b": "derived:engine/prefill_tokens(cold-warm)",
+            "serve/c": "registry:latency/ttft/p50"}
+    assert check_bench.run_checks(dict(BASE), BASE, tol=0.15,
+                                  provenance=prov) == []
+
+
+def test_adhoc_metric_is_an_orphan_and_named():
+    prov = {"serve/a": "registry:engine/weave_rate",
+            "serve/b": "adhoc",
+            "serve/c": "registry:latency/ttft/p50"}
+    failures = check_bench.run_checks(dict(BASE), BASE, tol=0.15,
+                                      provenance=prov)
+    assert len(failures) == 1
+    assert "orphan" in failures[0] and "serve/b" in failures[0]
+    assert "serve/a" not in failures[0]
+
+
+def test_missing_provenance_entry_is_an_orphan():
+    prov = {"serve/a": "registry:x", "serve/c": "registry:y"}
+    failures = check_bench.run_checks(dict(BASE), BASE, tol=0.15,
+                                      provenance=prov)
+    assert len(failures) == 1 and "serve/b" in failures[0]
+
+
+def test_no_provenance_map_is_backward_compatible():
+    # a pre-provenance metrics file (no __provenance__ key) still passes
+    assert check_bench.run_checks(dict(BASE), BASE, tol=0.15,
+                                  provenance=None) == []
+    assert check_bench.provenance_failures(None, BASE) == []

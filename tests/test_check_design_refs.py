@@ -10,8 +10,9 @@ import textwrap
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
                                 "scripts"))
-from check_design_refs import (check, find_citations,  # noqa: E402
-                               module_docstring_cites, parse_headings)
+from check_design_refs import (COVERED_PACKAGES, check,  # noqa: E402
+                               find_citations, module_docstring_cites,
+                               parse_headings)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -39,7 +40,7 @@ def _repo(tmp_path, design=DESIGN, files=()):
         p.write_text(text)
     # the covered packages must exist (empty is fine for pure-resolution
     # tests that create their own)
-    for pkg in ("src/repro/runtime", "src/repro/core"):
+    for pkg in COVERED_PACKAGES:
         (tmp_path / pkg).mkdir(parents=True, exist_ok=True)
     return tmp_path
 
