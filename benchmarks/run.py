@@ -817,6 +817,79 @@ def kernels_micro(quick=False):
     _row("kernels/flash_attention_interpret", us, "pallas_interpret")
 
 
+def profile_calibration(quick=False, report_path=None):
+    """Measured-time profile smoke + cost-model calibration (§13, opt-in
+    via --profile): run the tiny CPU model through the engine with a
+    ``WallClockProfiler`` attached, assert the profiled run is token-
+    identical to an unprofiled reference, fit the ``HW`` cost model from
+    the steady samples, and publish everything under the ``measured:``
+    provenance namespace — informational (machine-dependent), exempt
+    from the ±15% determinism gate, but drift-gated in CI through
+    scripts/check_calibration.py on the report this writes."""
+    from repro.analysis.calibration import fit_calibration
+    from repro.configs.base import ModelConfig, ParallelConfig
+    from repro.models.build import build_model
+    from repro.obs import WallClockProfiler
+    from repro.runtime.engine import Engine
+    from repro.runtime.requests import sharegpt_like_trace
+    from repro.runtime.scheduler import SchedulerConfig
+
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=128, dtype="float32")
+    pcfg = ParallelConfig(tokenweave=True, comm_mode="fused", remat=False,
+                          split_unit=16, tokenweave_min_tokens=32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    api = build_model(cfg, pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+    n_req = 8 if quick else 16
+    jit_cache = {}
+
+    def run(profiler, rec=None):
+        eng = Engine(api, mesh, params,
+                     SchedulerConfig(max_batch=4, chunk_tokens=64,
+                                     max_len=256, prefill_bucket=16,
+                                     paged=True),
+                     jit_cache=jit_cache, profiler=profiler,
+                     obs=rec, obs_track="profile")
+        # varied prompt lengths -> several prefill buckets -> several
+        # (method, tokens) calibration buckets
+        for r in sharegpt_like_trace(n_req, vocab=cfg.vocab_size, seed=7,
+                                     max_in=56, max_out=8):
+            r.max_new_tokens = max(2, min(r.max_new_tokens, 8))
+            eng.add_request(r)
+        done = eng.run()
+        return eng, {r.rid: tuple(r.output) for r in done}
+
+    _, ref = run(None)                        # also pre-compiles the cache
+    prof = WallClockProfiler()
+    # the recorder gives the measured spans a home in the merged --trace
+    # export (virtual spans on "profile", wall time on "profile [measured]")
+    eng, got = run(prof, rec=_recorder("profile"))
+    assert got == ref, "profiling changed tokens!"
+
+    steady = prof.steady_samples()
+    rep = fit_calibration(api.cfg, steady, tp=1,
+                          tile=pcfg.split_unit_for(1))
+    rep.export_to(eng.metrics)
+    snap = eng.metrics.snapshot()
+    for key in sorted(snap):
+        if key.startswith("profile/"):
+            _reg(f"measured:{key}", snap, key)
+    _row("profile/calibration", rep.overhead * 1e6,
+         f"n_steady={len(steady)} mfu_cap={rep.mfu_cap:.3g} "
+         f"ici_gbps={rep.ici / 1e9:.3g} worst_rel_err={rep.worst_rel_err:.3f} "
+         f"outputs_identical=True")
+    for mode in sorted(rep.per_mode_rel_err):
+        _row(f"profile/predicted_vs_measured/{mode}",
+             rep.per_mode_rel_err[mode] * 1e6,
+             f"rel_err={rep.per_mode_rel_err[mode]:.3f}")
+    if report_path:
+        rep.save(report_path)
+        print(f"wrote calibration report to {report_path}", file=sys.stderr)
+
+
 FIGS = [fig1_comm_overhead, fig4_fused_kernel, fig9_smart_split,
         fig11_latency, fig12_throughput, fig12_engine_cpu,
         serve_prefix_cache, serve_spec_decode, serve_packed, serve_online,
@@ -870,8 +943,23 @@ def main() -> None:
                         "Perfetto JSON (inspect or --validate it with "
                         "scripts/trace_view.py; load at "
                         "https://ui.perfetto.dev)")
+    p.add_argument("--profile", action="store_true",
+                   help="run the measured-time profile smoke + calibration "
+                        "fit (DESIGN.md §13); wall-clock results land in "
+                        "the JSON under the measured: namespace "
+                        "(provenance-required, tolerance-exempt)")
+    p.add_argument("--calibration-out", default=None, metavar="PATH",
+                   help="write the CalibrationReport JSON (implies "
+                        "--profile; gate it with "
+                        "scripts/check_calibration.py)")
     args = p.parse_args()
     figs = _select_figs(args.only)
+    if args.profile or args.calibration_out:
+        def _profile(quick=False):
+            profile_calibration(quick=quick,
+                                report_path=args.calibration_out)
+        _profile.__name__ = "profile_calibration"
+        figs.append(_profile)
     print("name,us_per_call,derived")
     errors = 0
     for fig in figs:

@@ -3,7 +3,7 @@ required e2e example): a ShareGPT-like trace through the continuous-batching
 engine with Sarathi-style chunked prefill, TokenWeave on, reporting
 throughput and per-request latency stats.
 
-    PYTHONPATH=src python examples/serve_trace.py [--requests 8] [--weave-off]
+    PYTHONPATH=src python examples/serve_e2e.py [--requests 8] [--weave-off]
 """
 import argparse
 import time

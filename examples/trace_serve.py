@@ -3,7 +3,7 @@ with a ``TraceRecorder`` attached — writes the Chrome-trace/Perfetto JSON,
 prints the per-phase compute/comm/overlapped virtual-time breakdown from
 the per-forward weave attributions, and walks ONE request's weave-decision
 log end to end (every forward the engine ran while it was live, with the
-split decision and §10 roofline estimate each one carried).
+split decision and §9 roofline estimate each one carried).
 
     PYTHONPATH=src python examples/trace_serve.py [--requests 8] \
         [--packed] [--out trace.json] [--follow RID]
@@ -80,7 +80,7 @@ def main():
         t[2] += a["est_compute"]
         t[3] += a["est_comm"]
         t[4] += a["est_overlapped"]
-    print("\nper-phase breakdown (est. §10-roofline virtual seconds):")
+    print("\nper-phase breakdown (est. §9-roofline virtual seconds):")
     print(f"  {'phase':<9} {'fwds':>5} {'weave':>6} {'compute':>11} "
           f"{'comm':>11} {'overlapped':>11} {'comm hidden':>11}")
     for kind in sorted(by_kind):

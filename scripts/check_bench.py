@@ -20,6 +20,11 @@ Compares the deterministic serving metrics a benchmark run wrote with
   metrics-registry ``snapshot()`` (source ``registry`` or ``derived``,
   DESIGN.md §12) — an ``adhoc`` metric is an orphan the observability
   layer cannot vouch for, and fails with its name listed.
+* ``measured:*`` keys (wall-clock profiling + calibration, written by
+  ``benchmarks.run --profile``, DESIGN.md §13) are machine-dependent and
+  therefore EXEMPT from the key-set and ±tolerance gates — but they are
+  still provenance-REQUIRED: every measured key must be registry-sourced
+  (no provenance map at all fails when measured keys are present).
 
     python scripts/check_bench.py BENCH_serve.json \
         [--baseline benchmarks/baseline.json] [--tol 0.15] [--allow-extra]
@@ -33,9 +38,43 @@ import sys
 # reserved key in the metrics JSON: {metric: source} map, never a metric
 PROVENANCE_KEY = "__provenance__"
 
+# wall-clock metrics namespace (DESIGN.md §13): informational, never
+# compared against the committed baseline
+MEASURED_PREFIX = "measured:"
+
 # sources the registry can vouch for: a snapshot key copied verbatim, or
 # a value computed from snapshot keys (recorded as derived:<expr>)
 _REGISTRY_SOURCES = ("registry", "derived")
+
+
+def split_measured(cur: dict) -> tuple[dict, dict]:
+    """Partition a metrics dict into (deterministic, measured)."""
+    det = {k: v for k, v in cur.items()
+           if not k.startswith(MEASURED_PREFIX)}
+    meas = {k: v for k, v in cur.items() if k.startswith(MEASURED_PREFIX)}
+    return det, meas
+
+
+def measured_failures(measured: dict, prov: dict | None) -> list[str]:
+    """measured:* keys skip the determinism gates but MUST be sourced
+    from a metrics-registry snapshot — unlike the baseline-keyed check,
+    a missing provenance map is itself a failure here, because measured
+    keys have no baseline entry vouching for them."""
+    if not measured:
+        return []
+    if prov is None:
+        return [f"{len(measured)} measured metric(s) present but the run "
+                f"has no {PROVENANCE_KEY} map: " + ", ".join(sorted(measured))]
+    orphans = sorted(
+        k for k in measured
+        if not str(prov.get(k, "adhoc")).startswith(_REGISTRY_SOURCES))
+    if not orphans:
+        for k in sorted(measured):
+            print(f"meas  {k}: {measured[k]:g} (informational, not gated)")
+        return []
+    return [f"{len(orphans)} measured metric(s) not sourced from a "
+            f"metrics-registry snapshot (orphans): " + ", ".join(
+                f"{k} [{prov.get(k, 'missing')}]" for k in orphans)]
 
 
 def provenance_failures(prov: dict | None, base: dict) -> list[str]:
@@ -99,9 +138,12 @@ def compare(cur: dict, base: dict, tol: float) -> list[str]:
 def run_checks(cur: dict, base: dict, tol: float,
                allow_extra: bool = False,
                provenance: dict | None = None) -> list[str]:
-    return (keyset_failures(cur, base, allow_extra=allow_extra)
-            + compare(cur, base, tol)
-            + provenance_failures(provenance, base))
+    det, measured = split_measured(cur)
+    base_det, _ = split_measured(base)
+    return (keyset_failures(det, base_det, allow_extra=allow_extra)
+            + compare(det, base_det, tol)
+            + provenance_failures(provenance, base_det)
+            + measured_failures(measured, provenance))
 
 
 def main() -> None:

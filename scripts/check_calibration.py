@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Calibration drift gate (CI `bench` job, DESIGN.md §13).
+
+Reads the ``CalibrationReport`` JSON that ``benchmarks.run --profile
+--calibration-out`` wrote, prints the fitted cost-model parameters and
+the per-mode predicted-vs-measured relative error, and fails when the
+worst divergence exceeds the threshold.
+
+The threshold is deliberately GENEROUS (default 10.0 = 1000% relative
+error): the tiny CI model on a shared CPU runner is nothing like the
+TPU the roofline constants describe, and the fixed overhead term
+absorbs most of the wall time — the gate exists to catch the cost model
+going structurally wrong (predictions orders of magnitude off, a mode
+missing, an unparseable report), not to enforce TPU-grade accuracy.
+Locally the same report is informational; tighten ``--max-drift`` when
+profiling on real accelerators.
+
+    python scripts/check_calibration.py BENCH_calibration.json \
+        [--max-drift 10.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REQUIRED = ("mfu_cap", "ici", "overhead", "per_mode_rel_err",
+            "worst_rel_err", "buckets", "n_samples")
+
+
+def check_report(rep: dict, max_drift: float) -> list[str]:
+    failures = []
+    missing = sorted(k for k in REQUIRED if k not in rep)
+    if missing:
+        return [f"malformed calibration report: missing field(s) "
+                + ", ".join(missing)]
+    if not rep["buckets"]:
+        failures.append("calibration report has zero buckets — the "
+                        "profile smoke produced no steady samples")
+    if not rep["per_mode_rel_err"]:
+        failures.append("no per-mode divergence recorded")
+    for mode in sorted(rep.get("per_mode_rel_err", {})):
+        err = float(rep["per_mode_rel_err"][mode])
+        ok = err <= max_drift
+        print(f"{'ok  ' if ok else 'FAIL'}  predicted_vs_measured"
+              f"{{mode={mode}}}: rel_err={err:.3f} (max {max_drift:g})")
+        if not ok:
+            failures.append(f"mode {mode}: predicted-vs-measured relative "
+                            f"error {err:.3f} exceeds --max-drift "
+                            f"{max_drift:g}")
+    worst = float(rep["worst_rel_err"])
+    if worst > max_drift:
+        failures.append(f"worst bucket {rep.get('worst_bucket', '?')}: "
+                        f"rel_err={worst:.3f} exceeds --max-drift "
+                        f"{max_drift:g}")
+    return failures
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog="Report schema + calibration math: DESIGN.md §13 and "
+               "src/repro/analysis/calibration.py.")
+    p.add_argument("report", help="CalibrationReport JSON from "
+                                  "benchmarks.run --calibration-out")
+    p.add_argument("--max-drift", type=float, default=10.0,
+                   help="max allowed predicted-vs-measured relative error "
+                        "per mode and per bucket (default 10.0; generous "
+                        "on purpose for CPU CI runners)")
+    args = p.parse_args()
+    try:
+        with open(args.report) as f:
+            rep = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"cannot read calibration report {args.report!r}: {e}",
+              file=sys.stderr)
+        sys.exit(1)
+
+    print(f"calibration: model={rep.get('model', '?')} "
+          f"tp={rep.get('tp', '?')} tile={rep.get('tile', '?')} "
+          f"n_samples={rep.get('n_samples', '?')}")
+    if all(k in rep for k in ("mfu_cap", "ici", "overhead")):
+        print(f"fitted: mfu_cap={rep['mfu_cap']:.4g} "
+              f"ici={rep['ici'] / 1e9:.4g} GB/s "
+              f"overhead={rep['overhead'] * 1e6:.4g} us "
+              f"step_base={rep.get('step_base', 0):.4g} s "
+              f"step_per_token={rep.get('step_per_token', 0):.3e} s/tok")
+    failures = check_report(rep, args.max_drift)
+    if failures:
+        print(f"\n{len(failures)} calibration check(s) failed:",
+              file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\ncalibration drift within ±{args.max_drift:g} across "
+          f"{len(rep['buckets'])} bucket(s), "
+          f"{len(rep['per_mode_rel_err'])} mode(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,10 +8,10 @@ map in the top-level README).  This script keeps those citations honest:
    the scanned roots must resolve to a real ``## §N`` heading in
    DESIGN.md.  (Bare ``§N`` without the ``DESIGN.md`` qualifier is NOT
    checked: the code also cites *paper* sections, e.g. "paper §3.1".)
-2. **Coverage** — every module under ``src/repro/runtime/`` and
-   ``src/repro/core/`` must have a module-level docstring containing at
-   least one ``DESIGN.md §N`` citation, so the module map stays complete
-   as the runtime grows.
+2. **Coverage** — every module under the ``COVERED_PACKAGES`` roots
+   (runtime, core, obs, analysis) must have a module-level docstring
+   containing at least one ``DESIGN.md §N`` citation, so the module map
+   stays complete as the runtime grows.
 
     python scripts/check_design_refs.py [--root .]
 
@@ -32,7 +32,7 @@ CITE_RE = re.compile(r"DESIGN(?:\.md)?\s+§(\d+)\b")
 SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
 # packages whose every module must *carry* a citation (coverage rule)
 COVERED_PACKAGES = ("src/repro/runtime", "src/repro/core",
-                    "src/repro/obs")
+                    "src/repro/obs", "src/repro/analysis")
 
 
 def parse_headings(design_text: str) -> set:
@@ -111,8 +111,8 @@ def main() -> None:
         for f in failures:
             print(f"  {f}", file=sys.stderr)
         sys.exit(1)
-    print("all DESIGN.md § citations resolve; runtime/ and core/ modules "
-          "all carry one")
+    print("all DESIGN.md § citations resolve; every covered-package "
+          "module carries one")
 
 
 if __name__ == "__main__":

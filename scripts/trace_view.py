@@ -4,16 +4,21 @@
     python scripts/trace_view.py BENCH_trace.json              # summary
     python scripts/trace_view.py BENCH_trace.json --validate   # CI gate
     python scripts/trace_view.py BENCH_trace.json --request online7
+    python scripts/trace_view.py BENCH_trace.json --measured   # §13
 
 Summary mode prints, per engine track: step/forward span counts, the
 trace-derived weave rate (weave forwards / forwards, recomputed from the
 per-forward attribution records — the same number `EngineStats.weave_rate`
 reports), and the estimated compute / comm / overlapped virtual-time
-totals from the §10 sim roofline.  ``--request`` walks one request's
+totals from the §9 sim roofline.  ``--request`` walks one request's
 lifecycle thread event by event (arrival → ... → terminal) including
 every forward step that touched it.  ``--validate`` runs the full schema
 check (``repro.obs.validate_chrome_trace``) and exits non-zero on any
 failure — the CI bench job runs this on the quick-sweep trace.
+``--measured`` summarizes the ``[measured]`` wall-clock track a
+``WallClockProfiler`` recorded (DESIGN.md §13): per (track, phase),
+measured seconds next to the §9-roofline virtual-second estimates and
+their ratio.
 
 The trace itself loads in the Perfetto UI: https://ui.perfetto.dev.
 """
@@ -81,6 +86,43 @@ def summarize(doc: dict) -> None:
           f"{n_term} reached a terminal phase")
 
 
+def summarize_measured(doc: dict) -> int:
+    """Virtual-vs-measured per phase from the ``[measured]`` track(s)."""
+    procs, _ = _tracks(doc)
+    per = defaultdict(lambda: {"n": 0, "measured_s": 0.0, "virtual_s": 0.0})
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") != "X" or ev.get("cat") != "measured":
+            continue
+        a = ev.get("args", {})
+        track = procs.get(ev["pid"], ev["pid"])
+        kind = a.get("kind", ev.get("name", "?"))
+        t = per[(track, kind)]
+        t["n"] += 1
+        # the exporter scales 1 virtual tick (= 1 wall second on the
+        # measured track) to 1e6 trace units
+        t["measured_s"] += ev.get("dur", 0.0) / 1e6
+        t["virtual_s"] += a.get("est_makespan", 0.0)
+    if not per:
+        print("no measured spans in this trace — record one with a "
+              "WallClockProfiler attached to the engine "
+              "(benchmarks.run --profile, DESIGN.md §13)", file=sys.stderr)
+        return 1
+    print(f"{'track':<22} {'phase':<9} {'n':>5} {'measured_s':>12} "
+          f"{'virtual_s':>12} {'meas/virt':>10}")
+    for (track, kind) in sorted(per):
+        t = per[(track, kind)]
+        ratio = (t["measured_s"] / t["virtual_s"] if t["virtual_s"]
+                 else float("inf"))
+        print(f"{str(track):<22} {kind:<9} {t['n']:>5} "
+              f"{t['measured_s']:>12.6f} {t['virtual_s']:>12.6f} "
+              f"{ratio:>10.3g}")
+    tot_m = sum(t["measured_s"] for t in per.values())
+    tot_v = sum(t["virtual_s"] for t in per.values())
+    print(f"total: measured={tot_m:.6f}s virtual={tot_v:.6g}s "
+          f"ratio={tot_m / tot_v if tot_v else float('inf'):.3g}")
+    return 0
+
+
 def show_request(doc: dict, rid: str) -> int:
     procs, threads = _tracks(doc)
     want = f"req {rid}"
@@ -130,6 +172,9 @@ def main() -> int:
                    help="schema + invariant check; non-zero exit on failure")
     p.add_argument("--request", default=None, metavar="RID",
                    help="walk one request's lifecycle thread")
+    p.add_argument("--measured", action="store_true",
+                   help="virtual-vs-measured wall-clock summary per phase "
+                        "(needs a trace recorded with a WallClockProfiler)")
     args = p.parse_args()
     with open(args.trace) as f:
         doc = json.load(f)
@@ -144,6 +189,8 @@ def main() -> int:
         n = len(doc.get("traceEvents", []))
         print(f"trace valid: {n} events")
         return 0
+    if args.measured:
+        return summarize_measured(doc)
     if args.request is not None:
         return show_request(doc, args.request)
     summarize(doc)

@@ -1,4 +1,4 @@
-"""Custom cost analyzer over optimized per-device HLO text.
+"""Custom cost analyzer over optimized per-device HLO text (DESIGN.md §9).
 
 XLA's `compiled.cost_analysis()` visits while (= lax.scan) bodies ONCE, so a
 95-layer scanned transformer reports 1/95th of its FLOPs. This module walks

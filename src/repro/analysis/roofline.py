@@ -1,4 +1,4 @@
-"""Three-term roofline from a compiled (dry-run) artifact.
+"""Three-term roofline from a compiled (dry-run) artifact (DESIGN.md §9).
 
 TPU v5e per chip: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 

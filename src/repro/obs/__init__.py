@@ -1,7 +1,6 @@
-"""Weave-aware observability layer (DESIGN.md §12).
+"""Weave-aware observability layer (DESIGN.md §12, §13).
 
-Three pieces, all deterministic (virtual-clock time only, never wall
-clock) and all zero-cost when tracing is off:
+Four pieces, all zero-cost when off:
 
 * ``metrics``      — typed registry (counters / gauges / histograms with
                      labels) that ``Engine``, ``OnlineServer`` and
@@ -14,13 +13,20 @@ clock) and all zero-cost when tracing is off:
                      a per-request lifecycle track.
 * ``attribution``  — the per-forward weave-decision record: tokens seen,
                      threshold, split chosen, overlap method, and the
-                     §10 sim-roofline estimate of compute / comm /
+                     §9 sim-roofline estimate of compute / comm /
                      overlapped virtual time, so ``EngineStats.weave_rate``
                      is derivable from the trace (DESIGN.md §12).
+* ``profiler``     — the one deliberate exception to virtual-clock-only:
+                     ``WallClockProfiler`` measures fenced per-dispatch
+                     wall time joined to the attribution record, feeding
+                     the ``analysis.calibration`` cost-model fit and the
+                     ``[measured]`` trace track (DESIGN.md §13).
 """
 from repro.obs.attribution import Attributor, WeaveAttribution
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                percentile)
+from repro.obs.profiler import (MEASURED_CAT, MeasuredForward,
+                                WallClockProfiler)
 from repro.obs.trace import (TERMINAL_PHASES, TraceRecorder,
                              export_chrome_trace, validate_chrome_trace,
                              weave_counts_from_trace)
@@ -28,6 +34,7 @@ from repro.obs.trace import (TERMINAL_PHASES, TraceRecorder,
 __all__ = [
     "Attributor", "WeaveAttribution",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "percentile",
+    "MEASURED_CAT", "MeasuredForward", "WallClockProfiler",
     "TERMINAL_PHASES", "TraceRecorder", "export_chrome_trace",
     "validate_chrome_trace", "weave_counts_from_trace",
 ]

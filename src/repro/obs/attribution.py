@@ -6,7 +6,7 @@ it chose (split + reason, straight from
 ``models.transformer.weave_decision_info`` — the SAME decision object
 that increments ``EngineStats.weave_forwards``, so trace-derived weave
 rates match the counter exactly), and what that choice is worth — the
-§10 two-stream sim roofline's estimate of compute / comm / overlapped
+§9 two-stream sim roofline's estimate of compute / comm / overlapped
 virtual time for this forward (``sim.overlap_sim.step_attribution``).
 
 The ``Attributor`` prices with ``HW(tile=pcfg.split_unit_for(tp))`` so
@@ -63,7 +63,7 @@ class WeaveAttribution:
 
 
 class Attributor:
-    """Prices forward steps on the §10 sim roofline for trace spans."""
+    """Prices forward steps on the §9 sim roofline for trace spans."""
 
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, tp: int):
         self.cfg = cfg

@@ -56,6 +56,7 @@ from repro.models import transformer as TRX
 from repro.models.build import ModelApi
 from repro.obs.attribution import Attributor, WeaveAttribution
 from repro.obs.metrics import MetricsRegistry, percentile as _percentile
+from repro.obs.profiler import WallClockProfiler
 from repro.obs.trace import TraceRecorder
 from repro.runtime import kv_cache as KC
 from repro.runtime import paging as PG
@@ -278,7 +279,8 @@ class Engine:
                  draft: SP.DraftProposer | None = None, seed: int = 0,
                  jit_cache: Dict | None = None,
                  obs: TraceRecorder | None = None,
-                 obs_track: str = "engine"):
+                 obs_track: str = "engine",
+                 profiler: "WallClockProfiler | None" = None):
         self.api = api
         self.mesh = mesh
         self.params = params
@@ -293,8 +295,16 @@ class Engine:
         # nothing and (invariant) tracing on changes no tokens or steps
         self.obs = obs
         self.obs_track = obs_track
+        # measured time (DESIGN.md §13): like obs, the profiler is None by
+        # default and every hook is behind an ``is not None`` guard; when
+        # set it only observes (fenced timing around dispatches), so
+        # profiled runs are token- and step-identical to unprofiled ones
+        self.profiler = profiler
+        if profiler is not None:
+            profiler.attach(self.metrics, trace=obs, track=obs_track)
         self._attributor = (Attributor(api.cfg, api.pcfg, api.tp)
-                            if obs is not None else None)
+                            if obs is not None or profiler is not None
+                            else None)
         self._step_forwards: List[WeaveAttribution] = []
         self._step_count = 0
         # jit_cache may be SHARED across engines built with the same
@@ -802,7 +812,7 @@ class Engine:
         """Emit this iteration's step span plus one nested forward span
         per model dispatch, carrying the weave attribution record
         (DESIGN.md §12).  All spans start at the step's clock stamp with
-        §10 sim-roofline durations; the step span covers its longest
+        §9 sim-roofline durations; the step span covers its longest
         forward, so nesting holds however far the owner clock advances."""
         obs = self.obs
         fwds = self._step_forwards
@@ -818,6 +828,13 @@ class Engine:
             obs.complete(self.obs_track, f"forward/{a.kind}", t0, d,
                          cat="forward", args=args)
         self._step_forwards = []
+
+    def _prof_wrap(self, jfn):
+        """Fenced wall-clock timing around one dispatch when a
+        ``WallClockProfiler`` is attached (DESIGN.md §13); identity
+        otherwise.  Applied at call sites, not in the jit cache, so a
+        SHARED cache never leaks one engine's profiler into another."""
+        return jfn if self.profiler is None else self.profiler.wrap(jfn)
 
     def _note_forward(self, b: int, s: int, n_real: int, *,
                       decode: bool = False, packed: bool = False,
@@ -838,9 +855,15 @@ class Engine:
                                        paged_pool=self.paged and decode)
         if info.weave:
             st._weave_forwards.inc()
-        if self.obs is not None:
-            self._step_forwards.append(self._attributor.attribute(
-                info, b=b, s=s, n_real=n_real, kind=kind))
+        if self._attributor is not None:
+            att = self._attributor.attribute(info, b=b, s=s, n_real=n_real,
+                                             kind=kind)
+            if self.obs is not None:
+                self._step_forwards.append(att)
+            if self.profiler is not None:
+                # join the fenced timing _prof_wrap stashed for this very
+                # dispatch to its attribution record (DESIGN.md §13)
+                self.profiler.commit(att)
 
     def run(self, max_steps: int = 100000) -> List[Request]:
         while not self.sched.all_done() and max_steps > 0:
@@ -984,14 +1007,14 @@ class Engine:
         if self.paged:
             self._apply_fixups()
             bt = np.stack([self.block_mgr.table_array(r.rid) for r in group])
-            fn = self._paged_prefill_fn(b_sel, chunk)
+            fn = self._prof_wrap(self._paged_prefill_fn(b_sel, chunk))
             tok, self.cache = fn(self.params, self.cache,
                                  jnp.asarray(tokens), jnp.asarray(positions),
                                  jnp.asarray(bt), jnp.asarray(last_idx),
                                  self._next_key())
         else:
             slot_ids = np.array([r.slot for r in group], np.int32)
-            fn = self._prefill_fn(b_sel, chunk)
+            fn = self._prof_wrap(self._prefill_fn(b_sel, chunk))
             tok, self.cache = fn(self.params, self.cache,
                                  jnp.asarray(tokens), jnp.asarray(positions),
                                  jnp.asarray(slot_ids), jnp.asarray(offsets),
@@ -1023,12 +1046,12 @@ class Engine:
             bt = np.full((bmax, self.scfg.max_blocks_per_req), -1, np.int32)
             for r in reqs:
                 bt[r.slot] = self.block_mgr.table_array(r.rid)
-            fn = self._paged_decode_fn()
+            fn = self._prof_wrap(self._paged_decode_fn())
             tok, self.cache = fn(self.params, self.cache,
                                  jnp.asarray(tokens), jnp.asarray(positions),
                                  jnp.asarray(bt), self._next_key())
         else:
-            fn = self._decode_fn()
+            fn = self._prof_wrap(self._decode_fn())
             tok, self.cache = fn(self.params, self.cache,
                                  jnp.asarray(tokens), jnp.asarray(positions),
                                  self._next_key())
@@ -1113,13 +1136,13 @@ class Engine:
             bt = np.full((bmax, self.scfg.max_blocks_per_req), -1, np.int32)
             for r in reqs:
                 bt[r.slot] = self.block_mgr.table_array(r.rid)
-            fn = self._paged_verify_fn(s_v)
+            fn = self._prof_wrap(self._paged_verify_fn(s_v))
             n_acc, emit, self.cache = fn(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(positions), jnp.asarray(bt), jnp.asarray(draft),
                 rng)
         else:
-            fn = self._verify_fn(s_v)
+            fn = self._prof_wrap(self._verify_fn(s_v))
             n_acc, emit, self.cache = fn(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(positions), jnp.asarray(draft), rng)
@@ -1221,7 +1244,7 @@ class Engine:
         if w > 1:
             args.append(jnp.asarray(draft))
         args.append(self._next_key())
-        fn = self._packed_fn(t, w)
+        fn = self._prof_wrap(self._packed_fn(t, w))
         n_acc, emit, self.cache = fn(*args)
         n_acc = np.asarray(n_acc)
         emit = np.asarray(emit)

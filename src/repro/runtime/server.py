@@ -60,6 +60,17 @@ class StepCost:
     def of(self, n_forward_tokens: int) -> float:
         return self.base + self.per_token * n_forward_tokens
 
+    @classmethod
+    def from_calibration(cls, cal) -> "StepCost":
+        """Measured-grounded virtual clock (DESIGN.md §13): ``base`` /
+        ``per_token`` come from the dispatch-granularity linear fit of
+        measured wall seconds vs real tokens in a ``CalibrationReport``
+        (analysis/calibration.py) — one virtual tick per wall second."""
+        def get(key):
+            return cal[key] if isinstance(cal, dict) else getattr(cal, key)
+        return cls(base=float(get("step_base")),
+                   per_token=float(get("step_per_token")))
+
 
 @dataclasses.dataclass
 class ServerConfig:

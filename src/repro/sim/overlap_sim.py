@@ -76,6 +76,27 @@ class HW:
     ici: float = ICI_EFF            # bidirectional ring on a torus axis
     tile: int = 256                 # token tile (wave quantum)
     mfu_cap: float = 0.6            # achievable fraction of peak on GEMMs
+    overhead: float = 0.0           # fixed per-dispatch seconds (launch,
+    #                                 host sync, runtime bookkeeping) —
+    #                                 fitted by analysis/calibration.py;
+    #                                 0.0 keeps legacy pure-roofline numbers
+
+    @classmethod
+    def from_calibration(cls, cal) -> "HW":
+        """Rebuild the fitted hardware model from a ``CalibrationReport``
+        (analysis/calibration.py, DESIGN.md §13) or its ``to_dict()`` /
+        JSON-loaded mapping.  Missing fields fall back to the defaults so
+        partial calibrations (e.g. mfu_cap only) still load."""
+        def get(key, default):
+            if isinstance(cal, dict):
+                return cal.get(key, default)
+            return getattr(cal, key, default)
+        return cls(peak=float(get("peak", PEAK_FLOPS)),
+                   hbm=float(get("hbm", HBM_BW)),
+                   ici=float(get("ici", ICI_EFF)),
+                   tile=int(get("tile", 256)),
+                   mfu_cap=float(get("mfu_cap", 0.6)),
+                   overhead=float(get("overhead", 0.0)))
 
 
 def _quantize(t: int, hw: HW) -> int:
@@ -225,9 +246,10 @@ def layer_latency(cfg: ModelConfig, mode: str, tokens: int, *, tp: int = 8,
     return total / n_layers
 
 
-def e2e_latency(cfg: ModelConfig, mode: str, tokens: int, **kw) -> float:
-    per_layer = layer_latency(cfg, mode, tokens, **kw)
-    return per_layer * cfg.num_layers
+def e2e_latency(cfg: ModelConfig, mode: str, tokens: int, *,
+                hw: Optional[HW] = None, **kw) -> float:
+    per_layer = layer_latency(cfg, mode, tokens, hw=hw, **kw)
+    return per_layer * cfg.num_layers + (hw.overhead if hw else 0.0)
 
 
 def step_attribution(cfg: ModelConfig, mode: str, tokens: int, *,
@@ -245,7 +267,12 @@ def step_attribution(cfg: ModelConfig, mode: str, tokens: int, *,
     quantity TokenWeave exists to maximize.  Scaled from the simulated
     ``n_layers`` window to the full ``cfg.num_layers`` model, matching
     ``e2e_latency``.  This prices the per-forward weave attribution
-    record the engine attaches to trace spans (obs/attribution.py)."""
+    record the engine attaches to trace spans (obs/attribution.py).
+
+    ``hw.overhead`` (the fixed per-dispatch cost fitted by
+    analysis/calibration.py, DESIGN.md §13) is added once to the makespan
+    — it is neither compute- nor comm-stream time, so the busy totals and
+    the overlapped term are unaffected."""
     hw = hw or HW()
     ctx = ctx if ctx is not None else tokens
     ops = layer_ops(cfg, mode, tokens, ctx, tp, hw, n_layers=n_layers)
@@ -259,7 +286,7 @@ def step_attribution(cfg: ModelConfig, mode: str, tokens: int, *,
         "comm": busy["comm"] * scale,
         "overlapped": max(busy["compute"] + busy["comm"] - makespan, 0.0)
         * scale,
-        "makespan": makespan * scale,
+        "makespan": makespan * scale + hw.overhead,
     }
 
 

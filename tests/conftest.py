@@ -90,19 +90,20 @@ def tiny_engine_builder(tiny_model):
     jit_caches = {}
 
     def build(*, draft=None, seed=0, temperature=0.0, top_k=0, top_p=1.0,
-              obs=None, obs_track="engine", **scfg_kw):
+              obs=None, obs_track="engine", profiler=None, **scfg_kw):
         api, mesh, params = tiny_model
         scfg_kw.setdefault("max_batch", 4)
         scfg_kw.setdefault("chunk_tokens", 48)
         scfg_kw.setdefault("max_len", 128)
         scfg_kw.setdefault("prefill_bucket", 16)
-        # obs is deliberately NOT in the jit-cache key: tracing must not
-        # change compilation (on/off identity, DESIGN.md §12)
+        # obs/profiler are deliberately NOT in the jit-cache key: tracing
+        # and measured-time profiling must not change compilation (on/off
+        # identity, DESIGN.md §12/§13)
         key = tuple(sorted(scfg_kw.items())) + (temperature, top_k, top_p)
         cache = jit_caches.setdefault(key, {})
         return Engine(api, mesh, params, SchedulerConfig(**scfg_kw),
                       temperature=temperature, top_k=top_k, top_p=top_p,
                       draft=draft, seed=seed, jit_cache=cache,
-                      obs=obs, obs_track=obs_track)
+                      obs=obs, obs_track=obs_track, profiler=profiler)
 
     return build

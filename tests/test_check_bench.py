@@ -99,3 +99,55 @@ def test_no_provenance_map_is_backward_compatible():
     assert check_bench.run_checks(dict(BASE), BASE, tol=0.15,
                                   provenance=None) == []
     assert check_bench.provenance_failures(None, BASE) == []
+
+
+# --------------------------------------------------------------------------
+# measured: namespace (DESIGN.md §13) — tolerance-exempt but
+# provenance-required
+# --------------------------------------------------------------------------
+
+_MEAS = "measured:profile/forward_us{mode=decode,weave=off}/p50"
+_PROV = {"serve/a": "registry:a", "serve/b": "registry:b",
+         "serve/c": "registry:c"}
+
+
+def test_measured_keys_exempt_from_keyset_and_tolerance():
+    """A measured key absent from the baseline, with an arbitrarily wild
+    value, passes — as long as its provenance is registry-sourced."""
+    cur = dict(BASE, **{_MEAS: 1e9})
+    prov = dict(_PROV, **{
+        _MEAS: "registry:profile/forward_us{mode=decode,weave=off}/p50"})
+    assert check_bench.run_checks(cur, BASE, tol=0.15,
+                                  provenance=prov) == []
+
+
+def test_orphan_measured_key_still_fails():
+    """The exemption is from determinism gates ONLY: a measured key the
+    registry cannot vouch for fails with its name listed."""
+    cur = dict(BASE, **{_MEAS: 42.0})
+    failures = check_bench.run_checks(
+        cur, BASE, tol=0.15, provenance=dict(_PROV, **{_MEAS: "adhoc"}))
+    assert len(failures) == 1
+    assert "orphan" in failures[0] and _MEAS in failures[0]
+    # ... and a measured key missing from the provenance map entirely
+    failures = check_bench.run_checks(cur, BASE, tol=0.15,
+                                      provenance=dict(_PROV))
+    assert len(failures) == 1 and _MEAS in failures[0]
+
+
+def test_measured_keys_require_a_provenance_map():
+    """Unlike baseline-gated keys (backward compatibility), measured keys
+    with NO provenance map at all are a failure — nothing vouches for
+    them."""
+    cur = dict(BASE, **{_MEAS: 42.0})
+    failures = check_bench.run_checks(cur, BASE, tol=0.15, provenance=None)
+    assert len(failures) == 1
+    assert check_bench.PROVENANCE_KEY in failures[0] and _MEAS in failures[0]
+
+
+def test_measured_keys_in_baseline_are_ignored():
+    """A measured key accidentally committed to the baseline must not
+    resurrect the key-set gate for measured metrics."""
+    base = dict(BASE, **{_MEAS: 10.0})
+    assert check_bench.run_checks(dict(BASE), base, tol=0.15,
+                                  provenance=None) == []
