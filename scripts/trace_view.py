@@ -9,8 +9,11 @@
 Summary mode prints, per engine track: step/forward span counts, the
 trace-derived weave rate (weave forwards / forwards, recomputed from the
 per-forward attribution records — the same number `EngineStats.weave_rate`
-reports), and the estimated compute / comm / overlapped virtual-time
-totals from the §9 sim roofline.  ``--request`` walks one request's
+reports), the per-forward decision reasons with the OVERLAP-POLICY plan
+ids that made them (plan id 0 = the degenerate global threshold, a
+nonzero id = a tuned plan cache from ``analysis/autotune.py``,
+DESIGN.md §14), and the estimated compute / comm / overlapped
+virtual-time totals from the §9 sim roofline.  ``--request`` walks one request's
 lifecycle thread event by event (arrival → ... → terminal) including
 every forward step that touched it.  ``--validate`` runs the full schema
 check (``repro.obs.validate_chrome_trace``) and exits non-zero on any
@@ -52,7 +55,9 @@ def summarize(doc: dict) -> None:
     procs, _ = _tracks(doc)
     per = defaultdict(lambda: {"steps": 0, "forwards": 0, "weave": 0,
                                "compute": 0.0, "comm": 0.0,
-                               "overlapped": 0.0, "by_reason": defaultdict(int)})
+                               "overlapped": 0.0,
+                               "by_reason": defaultdict(int),
+                               "by_plan": defaultdict(int)})
     requests = defaultdict(list)
     for ev in doc["traceEvents"]:
         ph, cat = ev.get("ph"), ev.get("cat")
@@ -67,6 +72,7 @@ def summarize(doc: dict) -> None:
             t["comm"] += a.get("est_comm", 0.0)
             t["overlapped"] += a.get("est_overlapped", 0.0)
             t["by_reason"][a.get("reason", "?")] += 1
+            t["by_plan"][a.get("plan_id", 0)] += 1
         elif ph == "i" and cat == "request":
             requests[(ev["pid"], ev["tid"])].append(ev["name"])
 
@@ -78,6 +84,10 @@ def summarize(doc: dict) -> None:
         reasons = ", ".join(f"{k}={v}" for k, v in
                             sorted(t["by_reason"].items()))
         print(f"  decisions: {reasons}")
+        plans = ", ".join(
+            f"{'global-threshold' if pid == 0 else f'plan {pid}'}={v}"
+            for pid, v in sorted(t["by_plan"].items()))
+        print(f"  decided by: {plans}")
         print(f"  est virtual time: compute={t['compute']:.6g} "
               f"comm={t['comm']:.6g} overlapped={t['overlapped']:.6g}")
     n_term = sum(1 for phases in requests.values()
@@ -142,9 +152,11 @@ def show_request(doc: dict, rid: str) -> int:
                      if v is not None}
             print(f"  t={ev['ts'] / 1e6:10.4f}  {ev['name']:<15} {extra}")
     # every forward span whose step committed tokens for this rid is not
-    # tagged per-rid (packed forwards are shared); show the weave decision
-    # log of all forwards instead, time-interleaved with the lifecycle
-    print(f"\nweave decisions while {rid} was live (all tracks):")
+    # tagged per-rid (packed forwards are shared); show the overlap-policy
+    # decision log of all forwards instead, time-interleaved with the
+    # lifecycle — each row names the plan that decided it (plan 0 = the
+    # degenerate global threshold, DESIGN.md §14)
+    print(f"\noverlap-policy decisions while {rid} was live (all tracks):")
     first = min((ev["ts"] for ev in doc["traceEvents"]
                  if (ev.get("pid"), ev.get("tid")) == (pid, tid)
                  and "ts" in ev), default=0.0)
@@ -158,9 +170,12 @@ def show_request(doc: dict, rid: str) -> int:
             continue
         a = ev.get("args", {})
         track = procs.get(ev["pid"], ev["pid"])
+        plan = a.get("plan_id", 0)
         print(f"  t={ev['ts'] / 1e6:10.4f}  {track:<10} {ev['name']:<16} "
               f"weave={str(bool(a.get('weave'))):<5} "
               f"reason={a.get('reason', '?'):<16} tokens={a.get('tokens')} "
+              f"plan={'threshold' if plan == 0 else plan} "
+              f"bucket={a.get('bucket', '?')} "
               f"ovl={a.get('est_overlapped', 0.0):.3g}")
     return 0
 

@@ -1,0 +1,250 @@
+"""Per-site overlap policy & tuned plan cache (DESIGN.md §14).
+
+The TokenWeave decision used to be a single global token threshold
+(``core/splitting.split_decision``).  The paper — and NeMo's per-site
+``TransformerLayerTPOverlapCfg`` — show the right overlap scheme differs
+per collective site and per (tokens, tp) regime, with an explicit
+resource budget à la Flash Communication.  This module is the one plan
+format every consumer shares:
+
+* ``OverlapPlan`` — what to do at one (site, tokens-bucket, tp, family)
+  key: method ∈ {``none``, ``weave``, ``fused-unsplit``}, the prefix-wave
+  split fraction, and the comm resource-budget fraction.
+* ``ThresholdPolicy`` — the DEGENERATE policy: the global token
+  threshold, pinned token-identical to ``split_decision`` (property-
+  tested field-for-field).  This is the default everywhere, so engines
+  without a tuned plan behave exactly as before.
+* ``TunedPolicy`` — a plan cache fitted offline by
+  ``analysis/autotune.py`` against the §9 sim under a calibrated ``HW``
+  (§13), serialized as versioned JSON under ``benchmarks/plans/`` and
+  loaded by ``Engine`` / ``OnlineServer`` / ``ClusterServer`` at
+  startup.  Lookups that miss fall back to the threshold decision, so a
+  partial plan is always safe.
+
+Decision sites mirror the engine's dispatch kinds — ``prefill`` (seq-
+axis split), ``decode`` (batch-axis), ``verify`` (γ+1 windows,
+batch-axis), ``packed`` (flat token axis) — because that is where the
+fused AllReduce+RMSNorm collectives fire per forward; a finer
+per-collective key (attn-out vs MLP) reuses the same format when the
+fused kernel becomes schedulable per site.
+
+Every decision is stamped with (plan_id, bucket) in its
+``SplitDecision`` so the §12 trace attribution can name which plan fired
+per forward.  Policies are frozen/hashable so they can ride inside the
+frozen ``ParallelConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional, Tuple
+
+from repro.core.splitting import (DEFAULT_BUCKET_EDGES, SplitDecision,
+                                  plan_split, split_decision, token_bucket)
+
+SITES = ("prefill", "decode", "verify", "packed")
+METHODS = ("none", "weave", "fused-unsplit")
+PLAN_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapPlan:
+    """One resolved per-site overlap scheme (DESIGN.md §14)."""
+    site: str
+    bucket: str
+    method: str          # none | weave | fused-unsplit
+    split_frac: float    # prefix-wave fraction (weave only; 0.5 = balanced)
+    budget: float        # comm resource-budget fraction in (0, 1]
+    plan_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    """One row of the tuned plan cache, keyed (site, bucket, tp, family)."""
+    site: str
+    bucket: str
+    tp: int
+    family: str
+    method: str
+    split_frac: float = 0.5
+    budget: float = 1.0
+
+    def validate(self) -> Optional[str]:
+        """Schema check; returns a failure string or None (valid)."""
+        if self.site not in SITES:
+            return f"unknown site {self.site!r} (want one of {SITES})"
+        if self.method not in METHODS:
+            return f"unknown method {self.method!r} (want one of {METHODS})"
+        if not (0.0 < self.split_frac < 1.0):
+            return f"split_frac {self.split_frac} outside (0, 1)"
+        if not (0.0 < self.budget <= 1.0):
+            return f"budget {self.budget} outside (0, 1]"
+        if self.tp < 1:
+            return f"tp {self.tp} < 1"
+        return None
+
+
+class OverlapPolicy:
+    """Interface: yield a per-site ``SplitDecision`` / ``OverlapPlan``.
+
+    ``decide`` receives exactly the arguments the legacy threshold
+    decision saw (n units along the split axis, wave unit, threshold,
+    rectangularity constraint) plus the plan key (site, tp, family) and
+    an optional ``bucket_tokens`` — the TRUE token count when the split
+    axis is rows (decode/verify), so bucket lookup keys on tokens even
+    where the split counts rows.
+    """
+    plan_id: int = 0
+
+    def decide(self, site: str, n_tokens: int, *, unit: int,
+               min_tokens: int, row_multiple: int = 1, tp: int = 1,
+               family: str = "dense",
+               bucket_tokens: Optional[int] = None) -> SplitDecision:
+        raise NotImplementedError
+
+    def plan_for(self, site: str, tokens: int, *, tp: int = 1,
+                 family: str = "dense") -> Optional[OverlapPlan]:
+        """The tuned plan covering (site, bucket(tokens), tp, family), or
+        None when the degenerate threshold fallback applies."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdPolicy(OverlapPolicy):
+    """The degenerate global-threshold policy: ``split_decision``
+    verbatim (plan_id pinned 0), the repo-wide default when no tuned
+    plan is installed.  Token-identity with the legacy path is exact by
+    construction and property-tested (tests/test_policy.py)."""
+    plan_id: int = 0
+
+    def decide(self, site: str, n_tokens: int, *, unit: int,
+               min_tokens: int, row_multiple: int = 1, tp: int = 1,
+               family: str = "dense",
+               bucket_tokens: Optional[int] = None) -> SplitDecision:
+        d = split_decision(n_tokens, unit=unit, min_tokens=min_tokens,
+                           row_multiple=row_multiple)
+        if bucket_tokens is not None and bucket_tokens != n_tokens:
+            d = dataclasses.replace(d, bucket=token_bucket(bucket_tokens))
+        return d
+
+    def plan_for(self, site: str, tokens: int, *, tp: int = 1,
+                 family: str = "dense") -> Optional[OverlapPlan]:
+        return None
+
+
+DEFAULT_POLICY = ThresholdPolicy()
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedPolicy(OverlapPolicy):
+    """Plan-cache-backed policy (DESIGN.md §14): per-(site, bucket, tp,
+    family) entries fitted offline by ``analysis/autotune.py``.  Keys
+    with no entry fall back to the degenerate threshold decision, so a
+    plan tuned for one deployment never breaks another."""
+    plan_id: int = 1
+    version: int = PLAN_VERSION
+    bucket_edges: Tuple[int, ...] = DEFAULT_BUCKET_EDGES
+    entries: Tuple[PlanEntry, ...] = ()
+    _index: Dict = dataclasses.field(init=False, repr=False, compare=False,
+                                     default_factory=dict)
+
+    def __post_init__(self):
+        idx = {(e.site, e.bucket, e.tp, e.family): e for e in self.entries}
+        object.__setattr__(self, "_index", idx)
+
+    def lookup(self, site: str, tokens: int, *, tp: int,
+               family: str) -> Optional[PlanEntry]:
+        bucket = token_bucket(tokens, self.bucket_edges)
+        return self._index.get((site, bucket, int(tp), family))
+
+    def plan_for(self, site: str, tokens: int, *, tp: int = 1,
+                 family: str = "dense") -> Optional[OverlapPlan]:
+        e = self.lookup(site, tokens, tp=tp, family=family)
+        if e is None:
+            return None
+        return OverlapPlan(site=e.site, bucket=e.bucket, method=e.method,
+                           split_frac=e.split_frac, budget=e.budget,
+                           plan_id=self.plan_id)
+
+    def decide(self, site: str, n_tokens: int, *, unit: int,
+               min_tokens: int, row_multiple: int = 1, tp: int = 1,
+               family: str = "dense",
+               bucket_tokens: Optional[int] = None) -> SplitDecision:
+        import math
+        bt = bucket_tokens if bucket_tokens is not None else n_tokens
+        e = self.lookup(site, bt, tp=tp, family=family)
+        if e is None:
+            # no tuned coverage: the degenerate threshold decision, but
+            # stamped with THIS plan's id so attribution shows the plan
+            # was consulted (bucket label reveals the fallback key)
+            d = split_decision(n_tokens, unit=unit, min_tokens=min_tokens,
+                               row_multiple=row_multiple)
+            return dataclasses.replace(d, plan_id=self.plan_id,
+                                       bucket=token_bucket(
+                                           bt, self.bucket_edges))
+        eff_unit = math.lcm(unit, max(row_multiple, 1))
+        if e.method == "weave":
+            split = plan_split(n_tokens, eff_unit, e.split_frac)
+            if split is not None:
+                return SplitDecision(split, "plan_split", n_tokens,
+                                     eff_unit, min_tokens, self.plan_id,
+                                     e.bucket)
+            # tuned weave structurally infeasible at this exact size
+            # (fewer than two full waves at the effective quantum)
+            return SplitDecision(None, "below_wave_floor", n_tokens,
+                                 eff_unit, min_tokens, self.plan_id,
+                                 e.bucket)
+        return SplitDecision(None, "plan_unsplit", n_tokens, eff_unit,
+                             min_tokens, self.plan_id, e.bucket)
+
+    # ---- versioned JSON plan cache (benchmarks/plans/*.json) ----------
+    def to_doc(self, **meta) -> dict:
+        doc = {
+            "version": self.version,
+            "plan_id": self.plan_id,
+            "bucket_edges": list(self.bucket_edges),
+            "entries": [dataclasses.asdict(e) for e in self.entries],
+        }
+        doc.update(meta)
+        return doc
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "TunedPolicy":
+        version = int(doc.get("version", -1))
+        if version != PLAN_VERSION:
+            raise ValueError(
+                f"plan cache version {version} unsupported (this build "
+                f"reads version {PLAN_VERSION}); regenerate with "
+                f"python -m repro.analysis.autotune")
+        names = {f.name for f in dataclasses.fields(PlanEntry)}
+        entries = tuple(
+            PlanEntry(**{k: v for k, v in e.items() if k in names})
+            for e in doc.get("entries", ()))
+        for e in entries:
+            err = e.validate()
+            if err:
+                raise ValueError(f"invalid plan entry {e}: {err}")
+        return cls(plan_id=int(doc.get("plan_id", 1)), version=version,
+                   bucket_edges=tuple(int(x)
+                                      for x in doc.get("bucket_edges",
+                                                       DEFAULT_BUCKET_EDGES)),
+                   entries=entries)
+
+    def save(self, path: str, **meta) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_doc(**meta), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "TunedPolicy":
+        with open(path) as f:
+            return cls.from_doc(json.load(f))
+
+
+def load_policy(path: Optional[str]) -> OverlapPolicy:
+    """Startup hook for ``Engine`` / ``OnlineServer`` / ``ClusterServer``:
+    a plan-cache path loads the tuned policy, None keeps the degenerate
+    global-threshold default (DESIGN.md §14)."""
+    if not path:
+        return DEFAULT_POLICY
+    return TunedPolicy.load(path)

@@ -39,7 +39,10 @@ from jax import lax
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import fused_collectives as fc
-from repro.core.splitting import split_decision
+from repro.core.splitting import split_decision, token_bucket  # noqa: F401
+#   (split_decision re-exported: tests + obs treat this module as the
+#    decision surface; the actual dispatch goes through the overlap
+#    policy, DESIGN.md §14)
 from repro.distributed.context import CommCtx
 from repro.layers import attention as A
 from repro.layers import embedding as E
@@ -328,43 +331,86 @@ class WeaveInfo:
     """Full weave decision for one forward dispatch: the split (in the
     dispatch's native axis units), WHY it was or wasn't taken, and the
     parameters the decision saw — the host-side record the observability
-    layer attaches to every forward span (DESIGN.md §12)."""
+    layer attaches to every forward span (DESIGN.md §12), stamped with
+    the overlap plan that produced it (DESIGN.md §14)."""
     weave: bool
     split: Optional[Tuple[int, int]]
     reason: str   # split | weave_disabled | paged_pool_unsplit |
-    #               below_min_tokens | below_wave_floor
+    #               below_min_tokens | below_wave_floor |
+    #               plan_split | plan_unsplit
     axis: str     # packed | batch | seq
     threshold: int  # configured tokenweave_min_tokens (tokens)
     unit: int       # effective wave quantum the decision used
+    site: str = ""      # policy decision site: prefill|decode|verify|packed
+    plan_id: int = 0    # 0 = degenerate global-threshold policy
+    bucket: str = ""    # tokens-bucket the decision was keyed on
+    budget: float = 1.0   # comm resource-budget fraction the plan granted
+    sim_method: str = ""  # plan-forced sim pricing mode; "" = legacy
+    #                       comm-mode mapping (obs/attribution.py)
+
+
+def _active_policy(pcfg: ParallelConfig):
+    from repro.core.policy import DEFAULT_POLICY
+    return pcfg.overlap_policy or DEFAULT_POLICY
+
+
+def _plan_meta(policy, site: str, tokens: int, tp: int, family: str
+               ) -> Tuple[float, str]:
+    """(budget, sim_method) granted by the active plan at this key.
+
+    sim_method stays "" (= the legacy comm-mode mapping in
+    obs/attribution.py) unless a plan entry forces a different pricing
+    mode: ``none`` disables the fused collective entirely -> vanilla."""
+    plan = policy.plan_for(site, tokens, tp=tp, family=family)
+    if plan is None:
+        return 1.0, ""
+    return plan.budget, ("vanilla" if plan.method == "none" else "")
 
 
 def weave_decision_info(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
                         decode: bool = False, packed: bool = False,
-                        paged_pool: bool = False) -> WeaveInfo:
+                        paged_pool: bool = False,
+                        family: str = "dense") -> WeaveInfo:
     """Host-side mirror of the trace-time weave split decision (pure int
     math), with the refusal reason attached.
 
+    The decision is delegated to the active ``OverlapPolicy``
+    (``pcfg.overlap_policy``, DESIGN.md §14) at one of four sites —
     prefill/train: split along the sequence dim (all rows cut at the same
     position — rectangular shapes); decode: split along the batch dim;
-    packed: split along the flat packed token axis (b == 1), so the
-    threshold sees the true combined iteration size (DESIGN.md §6).
+    verify: decode with s = gamma+1 tokens per row; packed: split along
+    the flat packed token axis (b == 1), so the threshold sees the true
+    combined iteration size (DESIGN.md §6).  Without an installed policy
+    the degenerate global-threshold ``ThresholdPolicy`` applies — token-
+    identical to the historical ``split_decision`` path.
     ``paged_pool`` marks a non-packed paged decode/verify dispatch, which
     always runs unsplit (a batch split would fork the shared pool,
     DESIGN.md §7); packed paged steps thread the pool sequentially
     through the splits and CAN weave.
     """
     thr = pcfg.tokenweave_min_tokens
+    policy = _active_policy(pcfg)
+    pid = getattr(policy, "plan_id", 0)
     if not pcfg.tokenweave:
         return WeaveInfo(False, None, "weave_disabled", "packed" if packed
-                         else ("batch" if decode else "seq"), thr, 0)
+                         else ("batch" if decode else "seq"), thr, 0,
+                         site="packed" if packed else (
+                             "decode" if decode and s == 1 else
+                             "verify" if decode else "prefill"),
+                         plan_id=pid, bucket=token_bucket(b * s))
     if paged_pool and not packed:
         return WeaveInfo(False, None, "paged_pool_unsplit",
-                         "batch" if decode else "seq", thr, 0)
+                         "batch" if decode else "seq", thr, 0,
+                         site="decode" if decode and s == 1 else
+                         "verify" if decode else "prefill",
+                         plan_id=pid, bucket=token_bucket(b * s))
     if packed:
-        d = split_decision(b * s, unit=pcfg.split_unit_for(tp),
-                           min_tokens=thr)
+        d = policy.decide("packed", b * s, unit=pcfg.split_unit_for(tp),
+                          min_tokens=thr, tp=tp, family=family)
+        budget, sim = _plan_meta(policy, "packed", b * s, tp, family)
         return WeaveInfo(d.split is not None, d.split, d.reason, "packed",
-                         thr, d.unit)
+                         thr, d.unit, site="packed", plan_id=d.plan_id,
+                         bucket=d.bucket, budget=budget, sim_method=sim)
     if decode:
         unit = max(tp, 8)
         if s > 1:
@@ -373,33 +419,43 @@ def weave_decision_info(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
             # this is exactly how spec decoding pushes decode iterations
             # across tokenweave_min_tokens (DESIGN.md §8)
             min_rows = max(2 * unit, -(-thr // s))
-            d = split_decision(b, unit=unit, min_tokens=min_rows)
+            d = policy.decide("verify", b, unit=unit, min_tokens=min_rows,
+                              tp=tp, family=family, bucket_tokens=b * s)
+            site = "verify"
         else:
-            d = split_decision(b, unit=unit, min_tokens=2 * unit)
+            d = policy.decide("decode", b, unit=unit, min_tokens=2 * unit,
+                              tp=tp, family=family)
+            site = "decode"
+        budget, sim = _plan_meta(policy, site, b * s, tp, family)
         return WeaveInfo(d.split is not None, d.split, d.reason, "batch",
-                         thr, d.unit)
-    d = split_decision(b * s, unit=pcfg.split_unit_for(tp), min_tokens=thr,
-                       row_multiple=b)
+                         thr, d.unit, site=site, plan_id=d.plan_id,
+                         bucket=d.bucket, budget=budget, sim_method=sim)
+    d = policy.decide("prefill", b * s, unit=pcfg.split_unit_for(tp),
+                      min_tokens=thr, row_multiple=b, tp=tp, family=family)
+    budget, sim = _plan_meta(policy, "prefill", b * s, tp, family)
     split = None if d.split is None else (d.split[0] // b, d.split[1] // b)
-    return WeaveInfo(split is not None, split, d.reason, "seq", thr, d.unit)
+    return WeaveInfo(split is not None, split, d.reason, "seq", thr, d.unit,
+                     site="prefill", plan_id=d.plan_id, bucket=d.bucket,
+                     budget=budget, sim_method=sim)
 
 
 def _decide_split(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
-                  decode: bool, packed: bool = False
-                  ) -> Optional[Tuple[int, int]]:
+                  decode: bool, packed: bool = False,
+                  family: str = "dense") -> Optional[Tuple[int, int]]:
     """Static (trace-time) TokenWeave split decision (per-dim sizes or
     None) — thin view over ``weave_decision_info``."""
     return weave_decision_info(b, s, tp=tp, pcfg=pcfg, decode=decode,
-                               packed=packed).split
+                               packed=packed, family=family).split
 
 
 def weave_decision(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
                    decode: bool = False, packed: bool = False,
-                   paged_pool: bool = False) -> bool:
+                   paged_pool: bool = False, family: str = "dense") -> bool:
     """Boolean view of ``weave_decision_info`` (the engine's legacy
     weave-activation predicate)."""
     return weave_decision_info(b, s, tp=tp, pcfg=pcfg, decode=decode,
-                               packed=packed, paged_pool=paged_pool).weave
+                               packed=packed, paged_pool=paged_pool,
+                               family=family).weave
 
 
 def _comm_ctx(pcfg: ParallelConfig, cfg: ModelConfig, t_local: int,
@@ -466,7 +522,7 @@ def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
 
     packed = packed_slots is not None
     split = _decide_split(b, s_total, tp=tp, pcfg=pcfg, decode=decode,
-                          packed=packed)
+                          packed=packed, family=cfg.family)
     if decode and block_tables is not None and not packed:
         split = None  # shared pool cannot be forked across a batch split
     pslots = None

@@ -77,6 +77,10 @@ class ClusterConfig:
     migration_cost: MigrationCost = dataclasses.field(
         default_factory=MigrationCost)
     max_steps: int = 1_000_000        # total engine steps across the fleet
+    # tuned overlap-plan cache installed on EVERY replica engine at
+    # cluster startup (core/policy.py, DESIGN.md §14); None keeps each
+    # engine's own policy
+    plan_path: Optional[str] = None
 
 
 class ClusterStats:
@@ -298,6 +302,14 @@ class ClusterServer:
         for rep in replicas:
             if rep.step_cost is None:
                 rep.step_cost = self.cfg.step_cost
+        if self.cfg.plan_path:
+            # one tuned plan for the whole fleet (DESIGN.md §14): each
+            # replica installs the same policy, so routing decisions never
+            # change which overlap scheme a request's tokens see
+            from repro.core.policy import load_policy
+            policy = load_policy(self.cfg.plan_path)
+            for rep in replicas:
+                rep.engine.install_overlap_policy(policy)
 
         prefill = [r for r in replicas if r.role == "prefill"]
         decode = [r for r in replicas if r.role == "decode"]

@@ -281,6 +281,15 @@ class Engine:
                  obs: TraceRecorder | None = None,
                  obs_track: str = "engine",
                  profiler: "WallClockProfiler | None" = None):
+        if scfg.plan_path:
+            # tuned overlap-plan cache (core/policy.py, DESIGN.md §14):
+            # install the policy on the model's ParallelConfig BEFORE any
+            # jit cache or attributor is built, so every consumer —
+            # forward dispatch, packed planner, attribution — sees it
+            from repro.core.policy import load_policy
+            api = dataclasses.replace(
+                api, pcfg=dataclasses.replace(
+                    api.pcfg, overlap_policy=load_policy(scfg.plan_path)))
         self.api = api
         self.mesh = mesh
         self.params = params
@@ -290,6 +299,9 @@ class Engine:
         self.top_p = top_p
         self.metrics = MetricsRegistry()
         self.stats = EngineStats(self.metrics)
+        self.metrics.gauge("engine/plan_id").set(
+            getattr(api.pcfg.overlap_policy, "plan_id", 0)
+            if api.pcfg.overlap_policy is not None else 0)
         # tracing (DESIGN.md §12): obs is None by default — every obs code
         # path is behind an ``is not None`` guard, so tracing off costs
         # nothing and (invariant) tracing on changes no tokens or steps
@@ -379,7 +391,12 @@ class Engine:
             cspec = api.cache_specs()
         self.sched = Scheduler(
             scfg, block_mgr=self.block_mgr,
-            on_admit=self._obs_admit if obs is not None else None)
+            on_admit=self._obs_admit if obs is not None else None,
+            # the packed planner consumes the SAME per-site overlap plan
+            # as the forward dispatch (DESIGN.md §14): a late-binding
+            # closure over self.api, so install_overlap_policy() swaps
+            # the planner's view too
+            overlap_hint=self._overlap_hint if self.packed else None)
         # disaggregated serving (DESIGN.md §11): requests parked by
         # ``_park_for_handoff`` wait here for the cluster to migrate them
         self.handoff_ready: List[Handoff] = []
@@ -394,6 +411,34 @@ class Engine:
         stochastic runs are reproducible for a fixed request order."""
         self._rng_key, k = jax.random.split(self._rng_key)
         return k
+
+    # ------------------------------------------------------------------
+    # per-site overlap policy (core/policy.py, DESIGN.md §14)
+    # ------------------------------------------------------------------
+    def _overlap_hint(self, tokens: int) -> TRX.WeaveInfo:
+        """The packed planner's view of the active overlap policy: the
+        same ``weave_decision_info`` the packed forward dispatch will run
+        for ``tokens``, stamped on ``PackedPlan.overlap`` — one plan
+        format everywhere."""
+        return TRX.weave_decision_info(
+            1, tokens, tp=self.api.tp, pcfg=self.api.pcfg, packed=True,
+            family=self.api.cfg.family)
+
+    def install_overlap_policy(self, policy) -> None:
+        """Swap the active ``OverlapPolicy`` (e.g. a freshly loaded tuned
+        plan).  The policy lives on the model's ``ParallelConfig``, which
+        is baked into jitted step closures and the attributor — so both
+        are rebuilt; in-flight requests and caches are untouched (the
+        policy only picks split points, never shapes semantics)."""
+        self.api = dataclasses.replace(
+            self.api, pcfg=dataclasses.replace(self.api.pcfg,
+                                               overlap_policy=policy))
+        self._jit_cache = {}
+        if self._attributor is not None:
+            self._attributor = Attributor(self.api.cfg, self.api.pcfg,
+                                          self.api.tp)
+        self.metrics.gauge("engine/plan_id").set(
+            getattr(policy, "plan_id", 0) if policy is not None else 0)
 
     # ------------------------------------------------------------------
     # jitted step functions
@@ -653,6 +698,14 @@ class Engine:
         st = self.stats
         m.gauge("engine/weave_rate").set(st.weave_rate)
         m.gauge("engine/tokens_per_forward").set(st.tokens_per_forward)
+        # per-site weave rates (overlap policy attribution, DESIGN.md §14)
+        for (name, lk), inst in list(m._instruments.items()):
+            if name != "engine/site_forwards" or not inst.value:
+                continue
+            labels = dict(lk)
+            w = m.get("engine/site_weave", **labels)
+            m.gauge("engine/site_weave_rate", **labels).set(
+                (w.value if w is not None else 0) / inst.value)
         m.gauge("spec/acceptance_rate").set(st.spec.acceptance_rate)
         m.gauge("spec/tokens_per_step").set(st.spec.tokens_per_step)
         m.gauge("latency/goodput").set(st.latency.goodput)
@@ -852,9 +905,15 @@ class Engine:
         info = TRX.weave_decision_info(b, s, tp=self.api.tp,
                                        pcfg=self.api.pcfg, decode=decode,
                                        packed=packed,
-                                       paged_pool=self.paged and decode)
+                                       paged_pool=self.paged and decode,
+                                       family=self.api.cfg.family)
+        # per-site weave attribution (DESIGN.md §14): which policy site
+        # decided, and whether the weave fired there
+        site = info.site or kind
+        self.metrics.counter("engine/site_forwards", site=site).inc()
         if info.weave:
             st._weave_forwards.inc()
+            self.metrics.counter("engine/site_weave", site=site).inc()
         if self._attributor is not None:
             att = self._attributor.attribute(info, b=b, s=s, n_real=n_real,
                                              kind=kind)

@@ -162,34 +162,65 @@ def t_norm(tokens: int, d: int, hw: HW, *, fused: bool) -> float:
 # schedules
 # --------------------------------------------------------------------------
 
+# comm-budget contention model (DESIGN.md §14): a tuned plan may cap the
+# fraction b of interconnect/SM resources the fused collective kernel
+# claims (Flash Communication's knob).  b scales wire bandwidth directly
+# (ici_eff = ici*b) and RELIEVES compute by the share of the MFU cap the
+# resident comm kernel taxes: mfu_eff = mfu_cap*(1 - TAX*b)/(1 - TAX),
+# normalized so b = 1.0 reproduces the legacy single-hw numbers bit-exactly
+# (the default mfu_cap already prices a full-budget comm kernel).
+_BUDGET_TAX = 0.2
+
+
+def _budgeted(hw: HW, comm_budget: Optional[float]) -> Tuple[HW, HW]:
+    """(hw_compute, hw_comm) under comm resource-budget fraction b."""
+    if comm_budget is None or comm_budget == 1.0:
+        return hw, hw
+    b = comm_budget
+    if not (0.0 < b <= 1.0):
+        raise ValueError(f"comm_budget must be in (0, 1], got {b}")
+    hw_comm = dataclasses.replace(hw, ici=hw.ici * b)
+    mfu = hw.mfu_cap * (1.0 - _BUDGET_TAX * b) / (1.0 - _BUDGET_TAX)
+    hw_compute = dataclasses.replace(hw, mfu_cap=mfu)
+    return hw_compute, hw_comm
+
+
 def layer_ops(cfg: ModelConfig, mode: str, tokens: int, ctx: int, tp: int,
-              hw: HW, n_layers: int = 4, smart: bool = True
+              hw: HW, n_layers: int = 4, smart: bool = True,
+              split: Optional[Tuple[int, int]] = None,
+              comm_budget: Optional[float] = None
               ) -> List[Op]:
-    """Build the op list for `n_layers` consecutive layers."""
+    """Build the op list for `n_layers` consecutive layers.
+
+    ``split`` pins the tokenweave split point explicitly (a tuned plan's
+    ``plan_split``); None keeps the built-in smart/naive split.
+    ``comm_budget`` applies the §14 resource-budget contention model;
+    None / 1.0 is the legacy full-budget pricing, bit-exact."""
     d = cfg.d_model
     n = tp
     ops: List[Op] = []
+    hwc, hwm = _budgeted(hw, comm_budget)
 
     def comm_block(tag: str, t: int, deps) -> Tuple[str, List[Op]]:
         """the AR(+norm) slot; returns (terminal op name, ops)."""
         if mode == "nocomm":
-            o = Op(f"norm{tag}", "compute", t_norm(t, d, hw, fused=False),
+            o = Op(f"norm{tag}", "compute", t_norm(t, d, hwc, fused=False),
                    tuple(deps))
             return o.name, [o]
         if mode == "vanilla":
-            a = Op(f"ar{tag}", "comm", t_allreduce(t, d, n, hw), tuple(deps))
-            b = Op(f"norm{tag}", "compute", t_norm(t, d, hw, fused=False),
+            a = Op(f"ar{tag}", "comm", t_allreduce(t, d, n, hwm), tuple(deps))
+            b = Op(f"norm{tag}", "compute", t_norm(t, d, hwc, fused=False),
                    (a.name,))
             return b.name, [a, b]
         if mode == "reordered":
-            a = Op(f"rs{tag}", "comm", t_rs_or_ag(t, d, n, hw), tuple(deps))
+            a = Op(f"rs{tag}", "comm", t_rs_or_ag(t, d, n, hwm), tuple(deps))
             b = Op(f"norm{tag}", "compute",
-                   t_norm(max(t // n, 1), d, hw, fused=False), (a.name,))
-            c = Op(f"ag{tag}", "comm", t_rs_or_ag(t, d, n, hw), (b.name,))
+                   t_norm(max(t // n, 1), d, hwc, fused=False), (a.name,))
+            c = Op(f"ag{tag}", "comm", t_rs_or_ag(t, d, n, hwm), (b.name,))
             return c.name, [a, b, c]
         # fused kernel: RS + single-pass norm on t/N + AG as ONE comm op
-        dur = (2 * t_rs_or_ag(t, d, n, hw)
-               + t_norm(max(t // n, 1), d, hw, fused=True))
+        dur = (2 * t_rs_or_ag(t, d, n, hwm)
+               + t_norm(max(t // n, 1), d, hwm, fused=True))
         o = Op(f"fused{tag}", "comm", dur, tuple(deps))
         return o.name, [o]
 
@@ -197,11 +228,11 @@ def layer_ops(cfg: ModelConfig, mode: str, tokens: int, ctx: int, tp: int,
         prev = ()
         for i in range(n_layers):
             at = Op(f"attn{i}", "compute",
-                    t_attn_layer(cfg, tokens, ctx, tp, hw), prev)
+                    t_attn_layer(cfg, tokens, ctx, tp, hwc), prev)
             ops.append(at)
             t1, blk = comm_block(f"_a{i}", tokens, [at.name])
             ops += blk
-            ff = Op(f"ffn{i}", "compute", t_ffn_layer(cfg, tokens, tp, hw),
+            ff = Op(f"ffn{i}", "compute", t_ffn_layer(cfg, tokens, tp, hwc),
                     (t1,))
             ops.append(ff)
             t2, blk2 = comm_block(f"_f{i}", tokens, [ff.name])
@@ -210,25 +241,27 @@ def layer_ops(cfg: ModelConfig, mode: str, tokens: int, ctx: int, tp: int,
         return ops
 
     assert mode == "tokenweave"
-    split = smart_split(tokens, hw.tile) if smart else naive_split(tokens)
     if split is None:
-        return layer_ops(cfg, "fuseonly", tokens, ctx, tp, hw, n_layers)
+        split = smart_split(tokens, hw.tile) if smart else naive_split(tokens)
+    if split is None:
+        return layer_ops(cfg, "fuseonly", tokens, ctx, tp, hw, n_layers,
+                         comm_budget=comm_budget)
     t0, t1v = split
     cache_ctx = max(ctx - tokens, 0)   # pre-existing (chunked-prefill) kv
     prev = {0: (), 1: ()}
     for i in range(n_layers):
         # paper Fig 8 order; suffix attends prefix's kv -> dep on attn0
         a0 = Op(f"attn0_{i}", "compute",
-                t_attn_layer(cfg, t0, cache_ctx + t0, tp, hw),
+                t_attn_layer(cfg, t0, cache_ctx + t0, tp, hwc),
                 prev[0])
         c0, blk0 = comm_block(f"_a0{i}", t0, [a0.name])
         a1 = Op(f"attn1_{i}", "compute",
-                t_attn_layer(cfg, t1v, cache_ctx + tokens, tp, hw),
+                t_attn_layer(cfg, t1v, cache_ctx + tokens, tp, hwc),
                 prev[1] + (a0.name,))
         c1, blk1 = comm_block(f"_a1{i}", t1v, [a1.name])
-        f0 = Op(f"ffn0_{i}", "compute", t_ffn_layer(cfg, t0, tp, hw), (c0,))
+        f0 = Op(f"ffn0_{i}", "compute", t_ffn_layer(cfg, t0, tp, hwc), (c0,))
         d0, blkd0 = comm_block(f"_f0{i}", t0, [f0.name])
-        f1 = Op(f"ffn1_{i}", "compute", t_ffn_layer(cfg, t1v, tp, hw), (c1,))
+        f1 = Op(f"ffn1_{i}", "compute", t_ffn_layer(cfg, t1v, tp, hwc), (c1,))
         d1, blkd1 = comm_block(f"_f1{i}", t1v, [f1.name])
         ops += [a0, a1, f0, f1] + blk0 + blk1 + blkd0 + blkd1
         prev = {0: (d0,), 1: (d1,)}
@@ -237,12 +270,15 @@ def layer_ops(cfg: ModelConfig, mode: str, tokens: int, ctx: int, tp: int,
 
 def layer_latency(cfg: ModelConfig, mode: str, tokens: int, *, tp: int = 8,
                   ctx: Optional[int] = None, hw: Optional[HW] = None,
-                  n_layers: int = 4, smart: bool = True) -> float:
+                  n_layers: int = 4, smart: bool = True,
+                  split: Optional[Tuple[int, int]] = None,
+                  comm_budget: Optional[float] = None) -> float:
     """Steady-state per-layer latency (simulate n_layers, divide)."""
     hw = hw or HW()
     ctx = ctx if ctx is not None else tokens
     total, _ = simulate(layer_ops(cfg, mode, tokens, ctx, tp, hw,
-                                  n_layers=n_layers, smart=smart))
+                                  n_layers=n_layers, smart=smart,
+                                  split=split, comm_budget=comm_budget))
     return total / n_layers
 
 
@@ -254,7 +290,9 @@ def e2e_latency(cfg: ModelConfig, mode: str, tokens: int, *,
 
 def step_attribution(cfg: ModelConfig, mode: str, tokens: int, *,
                      tp: int = 8, ctx: Optional[int] = None,
-                     hw: Optional[HW] = None, n_layers: int = 4
+                     hw: Optional[HW] = None, n_layers: int = 4,
+                     split: Optional[Tuple[int, int]] = None,
+                     comm_budget: Optional[float] = None
                      ) -> Dict[str, float]:
     """Per-forward compute/comm/overlap attribution (DESIGN.md §12).
 
@@ -272,10 +310,16 @@ def step_attribution(cfg: ModelConfig, mode: str, tokens: int, *,
     ``hw.overhead`` (the fixed per-dispatch cost fitted by
     analysis/calibration.py, DESIGN.md §13) is added once to the makespan
     — it is neither compute- nor comm-stream time, so the busy totals and
-    the overlapped term are unaffected."""
+    the overlapped term are unaffected.
+
+    ``split`` / ``comm_budget`` price a tuned plan's explicit split point
+    and resource budget (DESIGN.md §14); the defaults keep the legacy
+    smart-split full-budget pricing bit-exact — this is what the
+    ``analysis/autotune.py`` offline search evaluates per candidate."""
     hw = hw or HW()
     ctx = ctx if ctx is not None else tokens
-    ops = layer_ops(cfg, mode, tokens, ctx, tp, hw, n_layers=n_layers)
+    ops = layer_ops(cfg, mode, tokens, ctx, tp, hw, n_layers=n_layers,
+                    split=split, comm_budget=comm_budget)
     makespan, _ = simulate(ops)
     busy = {"compute": 0.0, "comm": 0.0}
     for op in ops:

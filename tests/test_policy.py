@@ -1,0 +1,310 @@
+"""Per-site overlap policy & tuned plan cache (core/policy.py,
+analysis/autotune.py, DESIGN.md §14).
+
+The load-bearing invariant: the DEGENERATE ``ThresholdPolicy`` must
+reproduce ``core/splitting.split_decision`` field-for-field over a
+randomized (tokens, unit, min_tokens, row_multiple) sweep — engines
+without a tuned plan behave exactly as before the policy object existed.
+The differential sweep at the bottom replays 25 seeded random traces
+through engines WITH and WITHOUT the committed tuned plan on both KV
+backends and asserts greedy token-identity: a plan reshapes HOW a
+forward overlaps, never what it computes.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.policy import (DEFAULT_POLICY, PLAN_VERSION, SITES,
+                               OverlapPlan, PlanEntry, ThresholdPolicy,
+                               TunedPolicy, load_policy)
+from repro.core.splitting import (DEFAULT_BUCKET_EDGES, plan_split,
+                                  smart_split, split_decision, token_bucket,
+                                  wave_count)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_PLAN = os.path.join(REPO, "benchmarks", "plans", "default.json")
+
+
+# --------------------------------------------------------------------------
+# the degenerate policy IS split_decision
+# --------------------------------------------------------------------------
+
+def test_threshold_policy_reproduces_split_decision_randomized():
+    """Satellite invariant: over a randomized sweep of every argument the
+    legacy threshold decision takes, the degenerate policy returns the
+    IDENTICAL SplitDecision (same split, reason, threshold, plan id 0)."""
+    rng = np.random.RandomState(42)
+    pol = ThresholdPolicy()
+    for _ in range(500):
+        n = int(rng.randint(1, 5000))
+        unit = int(rng.randint(1, 512))
+        min_tokens = int(rng.randint(0, 4096))
+        rows = int(rng.randint(1, 64))
+        site = SITES[int(rng.randint(0, len(SITES)))]
+        legacy = split_decision(n, unit=unit, min_tokens=min_tokens,
+                                row_multiple=rows)
+        got = pol.decide(site, n, unit=unit, min_tokens=min_tokens,
+                         row_multiple=rows, tp=int(rng.randint(1, 16)),
+                         family="dense")
+        assert got == legacy, (n, unit, min_tokens, rows, site)
+        assert got.plan_id == 0
+    assert pol.plan_for("prefill", 4096) is None
+    assert DEFAULT_POLICY == ThresholdPolicy()   # frozen/hashable default
+
+
+def test_threshold_policy_bucket_tokens_restamps_bucket_only():
+    """decode/verify split on ROWS but bucket on TOKENS: bucket_tokens
+    must only relabel the bucket, never change the split decision."""
+    pol = ThresholdPolicy()
+    d_rows = pol.decide("verify", 12, unit=4, min_tokens=8, row_multiple=3)
+    d_tok = pol.decide("verify", 12, unit=4, min_tokens=8, row_multiple=3,
+                       bucket_tokens=300)
+    assert (d_tok.split, d_tok.reason) == (d_rows.split, d_rows.reason)
+    assert d_tok.bucket == token_bucket(300)
+    assert d_rows.bucket == token_bucket(12)
+
+
+# --------------------------------------------------------------------------
+# plan_split: the tuner's parameterized wave split
+# --------------------------------------------------------------------------
+
+def test_plan_split_invariants():
+    rng = np.random.RandomState(7)
+    for _ in range(500):
+        n = int(rng.randint(1, 100_000))
+        unit = int(rng.randint(1, 1024))
+        frac = float(rng.choice([0.25, 0.5, 0.75, 0.1, 0.9]))
+        s = plan_split(n, unit, frac)
+        if s is None:
+            assert n < 2 * unit          # fewer than two full waves
+            continue
+        l1, l2 = s
+        assert l1 + l2 == n and l1 > 0 and l2 > 0
+        assert l1 % unit == 0            # prefix is full waves only
+        assert wave_count(l1, unit) + wave_count(l2, unit) \
+            == wave_count(n, unit)       # wave conservation (paper §3.1.1)
+
+
+def test_plan_split_half_is_smart_split():
+    rng = np.random.RandomState(8)
+    for _ in range(300):
+        n = int(rng.randint(1, 50_000))
+        unit = int(rng.randint(1, 512))
+        assert plan_split(n, unit, 0.5) == smart_split(n, unit)
+
+
+def test_token_bucket_labels():
+    edges = (0, 16, 32, 64)
+    assert token_bucket(0, edges) == "0-15"
+    assert token_bucket(15, edges) == "0-15"
+    assert token_bucket(16, edges) == "16-31"
+    assert token_bucket(63, edges) == "32-63"
+    assert token_bucket(64, edges) == "64+"
+    assert token_bucket(10_000, edges) == "64+"
+    assert token_bucket(48) == token_bucket(48, DEFAULT_BUCKET_EDGES)
+
+
+# --------------------------------------------------------------------------
+# TunedPolicy: lookup, fallback, serialization
+# --------------------------------------------------------------------------
+
+def _toy_policy():
+    entries = (
+        PlanEntry("prefill", "64-127", 1, "dense", "weave",
+                  split_frac=0.75, budget=1.0),
+        PlanEntry("prefill", "32-63", 1, "dense", "fused-unsplit"),
+        PlanEntry("packed", "128-255", 1, "dense", "none"),
+    )
+    return TunedPolicy(plan_id=77, bucket_edges=(0, 16, 32, 64, 128, 256),
+                       entries=entries)
+
+
+def test_tuned_policy_weave_entry_decides_plan_split():
+    pol = _toy_policy()
+    d = pol.decide("prefill", 96, unit=16, min_tokens=10_000)
+    # min_tokens is the LEGACY threshold — a tuned weave entry overrides it
+    assert d.reason == "plan_split"
+    assert d.split == plan_split(96, 16, 0.75)
+    assert d.plan_id == 77 and d.bucket == "64-127"
+    plan = pol.plan_for("prefill", 96)
+    assert plan == OverlapPlan("prefill", "64-127", "weave", 0.75, 1.0, 77)
+
+
+def test_tuned_policy_unsplit_entries():
+    pol = _toy_policy()
+    # fused-unsplit: no split even though the legacy threshold would split
+    d = pol.decide("prefill", 48, unit=16, min_tokens=32)
+    assert d.split is None and d.reason == "plan_unsplit"
+    assert split_decision(48, unit=16, min_tokens=32).split is not None
+    # method none at a packed site
+    d = pol.decide("packed", 200, unit=16, min_tokens=32)
+    assert d.split is None and d.reason == "plan_unsplit"
+
+
+def test_tuned_policy_infeasible_weave_reports_wave_floor():
+    pol = TunedPolicy(plan_id=5, bucket_edges=(0, 16),
+                      entries=(PlanEntry("prefill", "16+", 1, "dense",
+                                         "weave"),))
+    # bucket says weave but 24 tokens < 2 waves at unit 16
+    d = pol.decide("prefill", 24, unit=16, min_tokens=0)
+    assert d.split is None and d.reason == "below_wave_floor"
+    assert d.plan_id == 5
+
+
+def test_tuned_policy_miss_falls_back_to_threshold():
+    pol = _toy_policy()
+    legacy = split_decision(500, unit=16, min_tokens=32)
+    d = pol.decide("decode", 500, unit=16, min_tokens=32)   # no decode entry
+    assert (d.split, d.reason) == (legacy.split, legacy.reason)
+    assert d.plan_id == 77                 # ...but stamped as consulted
+    assert pol.plan_for("decode", 500) is None
+
+
+def test_tuned_policy_row_multiple_uses_effective_unit():
+    pol = TunedPolicy(plan_id=9, bucket_edges=(0,),
+                      entries=(PlanEntry("verify", "0+", 1, "dense",
+                                         "weave"),))
+    d = pol.decide("verify", 24, unit=4, min_tokens=0, row_multiple=3)
+    assert d.split is not None
+    l1, _ = d.split
+    assert l1 % 12 == 0                    # lcm(unit=4, rows=3)
+
+
+def test_plan_cache_json_round_trip(tmp_path):
+    pol = _toy_policy()
+    path = str(tmp_path / "plan.json")
+    pol.save(path, note="round-trip")
+    back = TunedPolicy.load(path)
+    assert back.plan_id == pol.plan_id
+    assert back.bucket_edges == pol.bucket_edges
+    assert back.entries == pol.entries
+    assert load_policy(path).plan_id == 77
+    assert load_policy(None) is DEFAULT_POLICY
+
+
+def test_plan_cache_version_and_schema_rejection(tmp_path):
+    doc = _toy_policy().to_doc()
+    bad = dict(doc, version=PLAN_VERSION + 1)
+    with pytest.raises(ValueError, match="regenerate"):
+        TunedPolicy.from_doc(bad)
+    bad = json.loads(json.dumps(doc))
+    bad["entries"][0]["method"] = "telepathy"
+    with pytest.raises(ValueError, match="method"):
+        TunedPolicy.from_doc(bad)
+    assert PlanEntry("prefill", "0+", 1, "dense", "weave",
+                     split_frac=1.5).validate() is not None
+    assert PlanEntry("prefill", "0+", 1, "dense", "weave",
+                     budget=0.0).validate() is not None
+
+
+def test_committed_default_plan_loads_and_covers_tiny():
+    """The plan cache every engine can point at must load and cover the
+    CI-tiny deployment the serve benchmarks run."""
+    pol = load_policy(DEFAULT_PLAN)
+    assert pol.plan_id > 0
+    for site in SITES:
+        assert pol.plan_for(site, 64, tp=1, family="dense") is not None
+        assert pol.plan_for(site, 2048, tp=8, family="dense") is not None
+
+
+# --------------------------------------------------------------------------
+# autotuner determinism
+# --------------------------------------------------------------------------
+
+def test_autotune_is_deterministic_and_prefers_canonical_weave():
+    from repro.analysis.autotune import build_default_plan
+    p1 = build_default_plan()
+    p2 = build_default_plan()
+    assert p1.plan_id == p2.plan_id
+    assert p1.entries == p2.entries
+    # committed cache == a fresh defaults run (the CI drift gate's claim)
+    committed = TunedPolicy.load(DEFAULT_PLAN)
+    assert committed.plan_id == p1.plan_id
+    assert committed.entries == p1.entries
+    # comm-free regime (tp=1 small buckets) must NOT weave — splitting
+    # only adds weight-read passes when there is nothing to hide
+    tiny_small = [e for e in p1.entries
+                  if e.tp == 1 and e.bucket in ("0-15", "16-31", "32-63")]
+    assert tiny_small and all(e.method != "weave" for e in tiny_small)
+    # comm-bound regime (tp=8 large buckets) must weave
+    big = [e for e in p1.entries if e.tp == 8 and e.bucket == "4096-8191"]
+    assert big and all(e.method == "weave" for e in big)
+
+
+# --------------------------------------------------------------------------
+# engine integration: loading a plan cannot change tokens
+# --------------------------------------------------------------------------
+
+def test_engine_loads_plan_and_stamps_attribution(tiny_engine_builder):
+    from repro.obs import TraceRecorder
+    from repro.runtime.requests import Request
+
+    def run(plan_path, rec=None):
+        eng = tiny_engine_builder(paged=True, packed=True,
+                                  plan_path=plan_path, obs=rec)
+        for i in range(3):
+            eng.add_request(Request(rid=i, prompt=list(range(20 + 8 * i)),
+                                    max_new_tokens=4))
+        done = eng.run()
+        return eng, {r.rid: tuple(r.output) for r in done}
+
+    eng0, ref = run(None)
+    assert eng0.metrics.get("engine/plan_id").value == 0
+    rec = TraceRecorder()
+    eng1, got = run(DEFAULT_PLAN, rec=rec)
+    assert got == ref, "loading a tuned plan changed emitted tokens!"
+    tuned_id = load_policy(DEFAULT_PLAN).plan_id
+    assert eng1.metrics.get("engine/plan_id").value == tuned_id
+    # every per-forward attribution span names the plan that decided it
+    fwd = [e for e in rec.events
+           if e["kind"] == "span" and e["cat"] == "forward"]
+    assert fwd and all(e["args"]["plan_id"] == tuned_id for e in fwd)
+    assert all(e["args"]["bucket"] for e in fwd)
+    # per-site counters exist for the packed dispatch
+    snap = eng1.metrics_snapshot()
+    assert snap["engine/site_forwards{site=packed}"] == len(fwd)
+
+
+def test_install_overlap_policy_swaps_and_resets(tiny_engine_builder):
+    eng = tiny_engine_builder(paged=True)
+    pol = load_policy(DEFAULT_PLAN)
+    eng.install_overlap_policy(pol)
+    assert eng.api.pcfg.overlap_policy is pol
+    assert eng.metrics.get("engine/plan_id").value == pol.plan_id
+    eng.install_overlap_policy(None)
+    assert eng.metrics.get("engine/plan_id").value == 0
+
+
+# --------------------------------------------------------------------------
+# differential: tuned plan vs legacy threshold, both KV backends
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("trial", range(25))
+def test_policy_differential_trace(trial, tiny_engine_builder):
+    """25 seeded random traces (mixed prefill, shared prefixes, spec
+    windows, cancellations) through the legacy-threshold engine and the
+    tuned-plan engine on BOTH KV backends: greedy token-identity across
+    all four.  Reuses the test_differential harness so the same invariant
+    sweeps (packed budget, slot reuse, block refcounts) ride along."""
+    from test_differential import _drive, _gen_trace
+
+    rng = np.random.RandomState(9000 + trial)
+    prompts, outs, gamma, cancels = _gen_trace(rng)
+    kw = dict(max_batch=3, chunk_tokens=48, max_len=128, prefill_bucket=16,
+              block_size=16, spec_gamma=gamma)
+
+    results = {}
+    for name, cfg in (
+            ("legacy_paged", dict(paged=True)),
+            ("tuned_paged", dict(paged=True, plan_path=DEFAULT_PLAN)),
+            ("legacy_slots", dict(paged=False)),
+            ("tuned_slots", dict(paged=False, plan_path=DEFAULT_PLAN))):
+        eng = tiny_engine_builder(**kw, **cfg)
+        results[name] = _drive(eng, prompts, outs, cancels)
+
+    ref = results["legacy_paged"]
+    for name in ("tuned_paged", "legacy_slots", "tuned_slots"):
+        assert results[name] == ref, (trial, gamma, cancels, name)
