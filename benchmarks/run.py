@@ -764,16 +764,24 @@ def serve_policy(quick=False):
     the policy only reshapes HOW a forward overlaps, never what it
     computes — and the trace-derived weave counts must equal the engine
     counters on every traced run.  Per-site weave rates come from the
-    engine's ``engine/site_weave_rate{site=...}`` gauges.  At tp=1 comm
-    is free, so the tuned plan honestly weaves LESS than the threshold
-    (it picks fused-unsplit below 64 tokens where splitting only adds
-    weight-read passes) — the tuned payoff is priced in part 2.
+    engine's ``engine/site_weave_rate{site=...}`` gauges; since the plan
+    routes every tiny bucket onto the ring fused kernel (method fused /
+    fused-unsplit), the tuned engine's ``engine/site_fused_rate`` gauges
+    must read 1.0 — on this CPU backend the ring mode gates down the
+    fallback ladder, which is exactly why the tokens stay pinned.
 
     Part 2 — analytic (sim, 70B/tp8): the load sweep where the tuned
-    plan must beat the degenerate policy — its budget-0.75 entries slow
-    comm (still hidden under compute) to free compute issue slots, so
-    the overlapped fraction rises and the makespan drops at EVERY sweep
-    point.  Both asserted strictly."""
+    plan must beat the degenerate policy — its fused entries dispatch
+    the ring AllReduce-RMSNorm kernel on a half ring-lane grant
+    (budget 0.5 -> 4 lanes, the paper's few-SM fused collective), so the
+    overlapped fraction rises and the makespan drops at EVERY sweep
+    point.  Both asserted strictly.
+
+    Part 3 — analytic (sim, 70B/tp8): the fused-path crossover the
+    paper claims (Fig. 8): the tuned fused configuration must STRICTLY
+    beat both the unsplit fused-collective baseline (fuseonly — no
+    weave) and the naive weave (tokenweave with composed collectives) at
+    every sweep point; the minimum gains are gated in baseline.json."""
     import os
 
     from repro.configs.base import ModelConfig, ParallelConfig
@@ -856,6 +864,13 @@ def serve_policy(quick=False):
          "engine/site_weave_rate{site=packed}")
     _reg("serve/policy/tuned_site_weave_rate_packed", snap_tp,
          "engine/site_weave_rate{site=packed}")
+    # fused-path routing: every decided site of the tuned engine rides a
+    # fused (ring-mode) plan entry; the threshold engine rides none
+    assert snap_tp["engine/site_fused_rate{site=packed}"] == 1.0, \
+        "tuned plan did not route the packed site onto the fused path"
+    assert snap_dp.get("engine/site_fused_rate{site=packed}", 0.0) == 0.0
+    _reg("serve/policy/tuned_site_fused_rate_packed", snap_tp,
+         "engine/site_fused_rate{site=packed}")
 
     # ---- part 2: tuned-vs-threshold on the sim load sweep (70B/tp8) ---
     from repro.configs import get_config
@@ -866,8 +881,8 @@ def serve_policy(quick=False):
     unit = ParallelConfig().split_unit_for(8)
     hw = HW(tile=unit)
     policy = load_policy(plan_path)
-    sim_mode = {"weave": "tokenweave", "fused-unsplit": "fuseonly",
-                "none": "vanilla"}
+    sim_mode = {"weave": "tokenweave", "fused": "ringweave",
+                "fused-unsplit": "ring", "none": "vanilla"}
     toks = [512, 2048, 8192] if quick else [512, 1024, 2048, 4096, 8192]
     deg_mk = deg_ov = tun_mk = tun_ov = 0.0
     for n in toks:
@@ -877,7 +892,7 @@ def serve_policy(quick=False):
         tun = step_attribution(
             big, sim_mode[plan.method], n, tp=8, hw=hw,
             split=(plan_split(n, unit, plan.split_frac)
-                   if plan.method == "weave" else None),
+                   if plan.method in ("weave", "fused") else None),
             comm_budget=None if plan.budget == 1.0 else plan.budget)
         assert tun["makespan"] < deg["makespan"], (
             f"tuned plan slower than threshold at {n} tokens: "
@@ -904,6 +919,38 @@ def serve_policy(quick=False):
     _reg("serve/policy/sim_overlap_frac_tuned", snap_sim,
          "sim/policy/overlap_frac{policy=tuned}")
 
+    # ---- part 3: fused crossover — ring-fused vs unsplit vs naive weave
+    gain_unsplit = gain_weave = float("inf")
+    for n in toks:
+        plan = policy.plan_for("prefill", n, tp=8, family=big.family)
+        assert plan is not None and plan.method in ("fused",
+                                                    "fused-unsplit"), (
+            f"70B/tp8 plan entry at {n} tokens is {plan and plan.method!r}"
+            f", expected a fused method")
+        fused = step_attribution(
+            big, sim_mode[plan.method], n, tp=8, hw=hw,
+            split=(plan_split(n, unit, plan.split_frac)
+                   if plan.method == "fused" else None),
+            comm_budget=None if plan.budget == 1.0 else plan.budget)
+        unsplit = step_attribution(big, "fuseonly", n, tp=8, hw=hw)
+        naive = step_attribution(big, "tokenweave", n, tp=8, hw=hw)
+        assert fused["makespan"] < unsplit["makespan"], (
+            f"fused not beating unsplit at {n} tokens: "
+            f"{fused['makespan']:.3e} vs {unsplit['makespan']:.3e}")
+        assert fused["makespan"] < naive["makespan"], (
+            f"fused not beating naive weave at {n} tokens: "
+            f"{fused['makespan']:.3e} vs {naive['makespan']:.3e}")
+        gain_unsplit = min(gain_unsplit,
+                           unsplit["makespan"] / fused["makespan"])
+        gain_weave = min(gain_weave, naive["makespan"] / fused["makespan"])
+    simreg.gauge("sim/policy/fused_gain", vs="unsplit").set(gain_unsplit)
+    simreg.gauge("sim/policy/fused_gain", vs="naive_weave").set(gain_weave)
+    snap_sim = simreg.snapshot()
+    _reg("serve/policy/sim_fused_gain_vs_unsplit", snap_sim,
+         "sim/policy/fused_gain{vs=unsplit}")
+    _reg("serve/policy/sim_fused_gain_vs_weave", snap_sim,
+         "sim/policy/fused_gain{vs=naive_weave}")
+
     steps = eng_dp.stats.steps + eng_tp.stats.steps
     _row("serve/policy", dt * 1e6 / max(steps, 1),
          f"plan_id=0 tuned_plan_id={tuned_id} "
@@ -914,6 +961,9 @@ def serve_policy(quick=False):
          f"overlap_frac_threshold={deg_frac:.3f} "
          f"overlap_frac_tuned={tun_frac:.3f} "
          f"makespan_gain={deg_mk / tun_mk:.3f}x")
+    _row("serve/policy/sim_fused_crossover", tun_mk / len(toks) * 1e6,
+         f"min_gain_vs_unsplit={gain_unsplit:.3f}x "
+         f"min_gain_vs_naive_weave={gain_weave:.3f}x")
 
 
 def fig14_overlap_comparison(quick=False):

@@ -28,6 +28,7 @@ from typing import List
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core.policy import PLAN_VERSION, TunedPolicy, token_bucket  # noqa: E402
+from repro.core.splitting import MAX_RING_CHANNELS, ring_channels  # noqa: E402
 
 REGEN_HINT = ("regenerate with: PYTHONPATH=src python -m "
               "repro.analysis.autotune --out benchmarks/plans/default.json")
@@ -66,6 +67,17 @@ def check_plan(doc: dict) -> List[str]:
         if e.bucket not in valid_buckets:
             failures.append(f"entry {key}: bucket {e.bucket!r} does not "
                             f"match the declared bucket_edges")
+        if e.method in ("fused", "fused-unsplit"):
+            # fused entries grant the ring kernel its lane count through
+            # the budget; a budget that rounds to zero lanes (or claims
+            # more than the kernel can drive) would over/under-commit the
+            # comm resource at runtime — reject it here, not in the engine
+            lanes = ring_channels(e.budget)
+            if not (1 <= lanes <= MAX_RING_CHANNELS):
+                failures.append(
+                    f"entry {key}: method {e.method!r} budget {e.budget} "
+                    f"maps to {lanes} ring lanes (want 1..."
+                    f"{MAX_RING_CHANNELS})")
     return failures
 
 

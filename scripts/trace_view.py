@@ -57,7 +57,8 @@ def summarize(doc: dict) -> None:
                                "compute": 0.0, "comm": 0.0,
                                "overlapped": 0.0,
                                "by_reason": defaultdict(int),
-                               "by_plan": defaultdict(int)})
+                               "by_plan": defaultdict(int),
+                               "by_method": defaultdict(int)})
     requests = defaultdict(list)
     for ev in doc["traceEvents"]:
         ph, cat = ev.get("ph"), ev.get("cat")
@@ -73,6 +74,7 @@ def summarize(doc: dict) -> None:
             t["overlapped"] += a.get("est_overlapped", 0.0)
             t["by_reason"][a.get("reason", "?")] += 1
             t["by_plan"][a.get("plan_id", 0)] += 1
+            t["by_method"][a.get("method", "?")] += 1
         elif ph == "i" and cat == "request":
             requests[(ev["pid"], ev["tid"])].append(ev["name"])
 
@@ -84,6 +86,12 @@ def summarize(doc: dict) -> None:
         reasons = ", ".join(f"{k}={v}" for k, v in
                             sorted(t["by_reason"].items()))
         print(f"  decisions: {reasons}")
+        # method=ring/ringweave rows are forwards the plan routed onto the
+        # REAL fused ring AllReduce-RMSNorm kernel (DESIGN.md §14)
+        methods = ", ".join(
+            f"{k}{' [fused-kernel]' if k in ('ring', 'ringweave') else ''}"
+            f"={v}" for k, v in sorted(t["by_method"].items()))
+        print(f"  methods: {methods}")
         plans = ", ".join(
             f"{'global-threshold' if pid == 0 else f'plan {pid}'}={v}"
             for pid, v in sorted(t["by_plan"].items()))

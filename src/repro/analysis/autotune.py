@@ -2,15 +2,19 @@
 
 Searches, per (site, tokens-bucket, tp, model family), over the overlap
 scheme the engine should run at that key — method ∈ {none, weave,
-fused-unsplit}, the weave's prefix-wave split fraction, and the comm
-resource-budget fraction — by pricing every candidate with the §9
+fused-unsplit, fused}, the weave's prefix-wave split fraction, and the
+comm resource-budget fraction — by pricing every candidate with the §9
 two-stream sim (``sim.overlap_sim.step_attribution``) under a calibrated
 ``HW`` (``HW.from_calibration``, DESIGN.md §13) or the roofline
-defaults.  The winner per bucket minimizes the simulated makespan, ties
-broken toward more overlapped virtual time and then toward the earlier
-candidate in the deterministic preference order (weave@0.5/full-budget
-first — wave-conserving splits are free in the model and strictly better
-the moment comm is nonzero, so ties collapse to the canonical weave).
+defaults.  The fused methods dispatch the REAL ring AllReduce-RMSNorm
+kernel and are priced from their ring-lane resource grant
+(``ring_channels(budget)``, the paper's 2-8 SM knob) via the sim's
+``ring``/``ringweave`` modes — not the generic contention model.  The
+winner per bucket minimizes the simulated makespan, ties broken toward
+more overlapped virtual time and then toward the earlier candidate in
+the deterministic preference order (fused@0.5/full-budget first — the
+one-kernel ring path strictly dominates the composed path in the model,
+so ties collapse to the canonical fused weave).
 
 The result is a versioned JSON plan cache (``core/policy.TunedPolicy``)
 committed under ``benchmarks/plans/`` and loaded by ``Engine`` /
@@ -38,12 +42,13 @@ from repro.sim.overlap_sim import HW, step_attribution
 
 # candidate grid: preference order matters — the FIRST candidate at the
 # minimal (makespan, -overlapped) key wins, so ties collapse to the
-# canonical balanced full-budget weave, then alternative fracs/budgets,
-# then the unsplit fused kernel, then no fused collective at all.
+# canonical balanced full-budget fused (ring-kernel) weave, then
+# alternative fracs/budgets, then the composed weave, then the unsplit
+# ring kernel, then no fused collective at all.
 SPLIT_FRACS = (0.5, 0.25, 0.75)
 BUDGETS = (1.0, 0.75, 0.5)
-_SIM_MODE = {"weave": "tokenweave", "fused-unsplit": "fuseonly",
-             "none": "vanilla"}
+_SIM_MODE = {"fused": "ringweave", "weave": "tokenweave",
+             "fused-unsplit": "ring", "none": "vanilla"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,15 +78,22 @@ def _buckets(edges: Tuple[int, ...]) -> List[Tuple[str, int]]:
 
 
 def _candidates(rep: int, unit: int) -> List[Tuple[str, float, float]]:
-    """(method, split_frac, budget) grid, preference-ordered; weave
-    candidates whose split is structurally infeasible at the
-    representative size are dropped."""
+    """(method, split_frac, budget) grid, preference-ordered; split
+    candidates (fused/weave) structurally infeasible at the
+    representative size are dropped.  The fused methods search the
+    budget axis as their ring-lane grant (``ring_channels``); the
+    composed weave keeps the generic contention budget."""
     cands: List[Tuple[str, float, float]] = []
     for b in BUDGETS:
         for f in SPLIT_FRACS:
             if plan_split(rep, unit, f) is not None:
+                cands.append(("fused", f, b))
+    for b in BUDGETS:
+        for f in SPLIT_FRACS:
+            if plan_split(rep, unit, f) is not None:
                 cands.append(("weave", f, b))
-    cands.append(("fused-unsplit", 0.5, 1.0))
+    for b in BUDGETS:
+        cands.append(("fused-unsplit", 0.5, b))
     cands.append(("none", 0.5, 1.0))
     return cands
 
@@ -105,7 +117,7 @@ def tune_entries(target: TuneTarget, *, hw: Optional[HW] = None,
             est = step_attribution(
                 target.cfg, _SIM_MODE[method], rep, tp=target.tp, hw=hw,
                 split=(plan_split(rep, hw.tile, frac)
-                       if method == "weave" else None),
+                       if method in ("weave", "fused") else None),
                 comm_budget=None if budget == 1.0 else budget)
             key = (round(est["makespan"], 15), -round(est["overlapped"], 15))
             if best_key is None or key < best_key:

@@ -185,6 +185,9 @@ class ParallelConfig:
     #   vanilla   : psum -> (+residual) -> full redundant RMSNorm   (baseline)
     #   reordered : psum_scatter -> +res -> RMSNorm -> all_gather (unfused ops)
     #   fused     : psum_scatter -> single-pass fused add+norm -> all_gather
+    #   ring      : ONE Pallas ring AllReduce-RMSNorm kernel (reduce-scatter,
+    #               fused add+norm on the owned chunk, all-gather; falls back
+    #               to `fused` where unsupported — core/fused_collectives.py)
     #   nocomm    : skip collectives entirely (perf counterfactual, wrong math)
     comm_mode: str = "fused"
     tokenweave: bool = True

@@ -1,5 +1,5 @@
 """The paper's core op (DESIGN.md §2): AllReduce + residual-add + RMSNorm,
-four ways.
+five ways.
 
 All variants run inside ``jax.shard_map`` with manual collectives so the
 collective schedule is explicit (the paper's point). Shapes (per dp shard):
@@ -19,7 +19,16 @@ Modes:
                 with the *unfused* two-pass add+norm (paper Fig. 4 middle bar:
                 reordering alone, overheads eat the gains)
     fused     : psum_scatter -> single-pass fused add+norm kernel ->
-                all_gather (paper's fused AllReduce-RMSNorm)
+                all_gather (paper's fused AllReduce-RMSNorm, composed from
+                XLA collectives)
+    ring      : the REAL single-kernel path — kernels/ring_ar_rmsnorm.py
+                does reduce-scatter + fused add/norm + all-gather in ONE
+                Pallas kernel on ``ring_channels(ctx.comm_budget)`` comm
+                lanes (the paper's 2-8 SM multimem kernel, TPU ring
+                analogue). Falls down a ladder to the ``fused``
+                composition when the backend can't run it (see
+                ``_ring_supported``); numerics pinned either way by
+                tests/test_fused_path.py.
     nocomm    : collectives skipped entirely (perf counterfactual; wrong math,
                 correct shapes - mirrors vllm-nocomm)
 """
@@ -27,10 +36,27 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 from jax import lax
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.splitting import ring_channels
 from repro.distributed.context import CommCtx, token_shard_slice
 from repro.kernels.ops import fused_residual_rmsnorm
+from repro.kernels.ring_ar_rmsnorm import ring_fused_ar_rmsnorm
 from repro.layers.norms import residual_rmsnorm_unfused, rms_norm
+
+
+def _ring_supported(ctx: CommCtx, reduce_input: bool, weight_post) -> bool:
+    """Fallback ladder for mode="ring" (DESIGN.md §2): the one-kernel ring
+    path needs (a) a genuine reduction to fold in (``reduce_input``), (b)
+    no sandwich post-norm (the kernel fuses exactly add+norm), (c) Pallas
+    enabled, and (d) a backend whose interpreter can emulate remote DMAs
+    when interpreting — jax < 0.5's CPU interpreter (no
+    ``pltpu.InterpretParams``) cannot, so CI gates to the composition."""
+    if not (reduce_input and weight_post is None and ctx.use_pallas):
+        return False
+    if ctx.interpret and not hasattr(pltpu, "InterpretParams"):
+        return False
+    return True
 
 
 def comm_norm(x, residual, weight, *, ctx: CommCtx, reduce_input: bool = True,
@@ -56,8 +82,16 @@ def comm_norm(x, residual, weight, *, ctx: CommCtx, reduce_input: bool = True,
         out, new_res = residual_rmsnorm_unfused(x, residual, weight, ctx.eps)
         return out, new_res
 
-    if mode not in ("reordered", "fused"):
+    if mode not in ("reordered", "fused", "ring"):
         raise ValueError(f"unknown comm mode {mode!r}")
+
+    if mode == "ring":
+        if _ring_supported(ctx, reduce_input, weight_post):
+            return ring_fused_ar_rmsnorm(
+                x, residual, weight, axis_name=ctx.tp_axis,
+                n_dev=ctx.tp_size(), eps=ctx.eps, interpret=ctx.interpret,
+                channels=max(1, ring_channels(ctx.comm_budget)))
+        mode = "fused"  # rung 2 of the ladder: the composed RS/fused/AG path
 
     # --- TokenWeave path: RS -> (+res, norm on 1/N tokens) -> AG -----------
     if reduce_input:

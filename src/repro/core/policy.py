@@ -8,8 +8,10 @@ resource budget à la Flash Communication.  This module is the one plan
 format every consumer shares:
 
 * ``OverlapPlan`` — what to do at one (site, tokens-bucket, tp, family)
-  key: method ∈ {``none``, ``weave``, ``fused-unsplit``}, the prefix-wave
-  split fraction, and the comm resource-budget fraction.
+  key: method ∈ {``none``, ``weave``, ``fused-unsplit``, ``fused``}, the
+  prefix-wave split fraction, and the comm resource-budget fraction
+  (mapped to the ring kernel's lane count by
+  ``core.splitting.ring_channels``).
 * ``ThresholdPolicy`` — the DEGENERATE policy: the global token
   threshold, pinned token-identical to ``split_decision`` (property-
   tested field-for-field).  This is the default everywhere, so engines
@@ -43,7 +45,16 @@ from repro.core.splitting import (DEFAULT_BUCKET_EDGES, SplitDecision,
                                   plan_split, split_decision, token_bucket)
 
 SITES = ("prefill", "decode", "verify", "packed")
-METHODS = ("none", "weave", "fused-unsplit")
+# method semantics (DESIGN.md §14):
+#   none          — never split, generic comm path
+#   weave         — wave-aware token split, composed-collective comm
+#   fused-unsplit — REAL ring AllReduce-RMSNorm kernel, no split (the
+#                   paper's fused kernel without TokenWeave; its `budget`
+#                   sizes the kernel's ring lanes via
+#                   core.splitting.ring_channels)
+#   fused         — ring kernel + wave-aware split: the full TokenWeave
+#                   configuration the paper ships (Fig. 8)
+METHODS = ("none", "weave", "fused-unsplit", "fused")
 PLAN_VERSION = 1
 
 
@@ -52,8 +63,8 @@ class OverlapPlan:
     """One resolved per-site overlap scheme (DESIGN.md §14)."""
     site: str
     bucket: str
-    method: str          # none | weave | fused-unsplit
-    split_frac: float    # prefix-wave fraction (weave only; 0.5 = balanced)
+    method: str          # none | weave | fused-unsplit | fused
+    split_frac: float    # prefix-wave fraction (weave/fused; 0.5 = balanced)
     budget: float        # comm resource-budget fraction in (0, 1]
     plan_id: int
 
@@ -183,19 +194,19 @@ class TunedPolicy(OverlapPolicy):
                                        bucket=token_bucket(
                                            bt, self.bucket_edges))
         eff_unit = math.lcm(unit, max(row_multiple, 1))
-        if e.method == "weave":
+        if e.method in ("weave", "fused"):
             split = plan_split(n_tokens, eff_unit, e.split_frac)
             if split is not None:
                 return SplitDecision(split, "plan_split", n_tokens,
                                      eff_unit, min_tokens, self.plan_id,
-                                     e.bucket)
+                                     e.bucket, e.budget)
             # tuned weave structurally infeasible at this exact size
             # (fewer than two full waves at the effective quantum)
             return SplitDecision(None, "below_wave_floor", n_tokens,
                                  eff_unit, min_tokens, self.plan_id,
-                                 e.bucket)
+                                 e.bucket, e.budget)
         return SplitDecision(None, "plan_unsplit", n_tokens, eff_unit,
-                             min_tokens, self.plan_id, e.bucket)
+                             min_tokens, self.plan_id, e.bucket, e.budget)
 
     # ---- versioned JSON plan cache (benchmarks/plans/*.json) ----------
     def to_doc(self, **meta) -> dict:

@@ -50,6 +50,25 @@ def wave_count(n_tokens: int, unit: int) -> int:
     return math.ceil(n_tokens / unit)
 
 
+# ---- comm resource budget -> ring-lane (SM-equivalent) mapping ----------
+# The paper's fused multimem kernel runs on 2-8 SMs; the TPU ring kernel's
+# analogue resource is its comm-slot ("channel") count — the number of
+# in-flight ring lanes (kernels/ring_ar_rmsnorm.py).  A plan entry's
+# ``budget`` in (0, 1] is the SM-equivalent fraction granted to comm
+# (NeMo's per-op ``num_sm`` knob, DESIGN.md §14):
+#     channels = round(budget * MAX_RING_CHANNELS)
+# Deliberately NOT clamped to >= 1 here: scripts/check_plan.py rejects
+# plan entries whose budget maps to zero lanes (an overcommitted plan
+# would grant the kernel no comm resources at all); runtime callers clamp
+# with max(1, ...) after validation.
+MAX_RING_CHANNELS: int = 8
+
+
+def ring_channels(budget: float) -> int:
+    """SM-equivalent comm budget -> ring-lane count for the fused kernel."""
+    return int(round(float(budget) * MAX_RING_CHANNELS))
+
+
 # token-bucket edges shared by the overlap policy layer (core/policy.py,
 # DESIGN.md §14): a decision at n tokens falls in the bucket whose lower
 # edge is the largest edge <= n.  Kept here (pure token math) so both the
@@ -112,6 +131,7 @@ class SplitDecision:
     min_tokens: int
     plan_id: int = 0          # 0 = degenerate global-threshold policy
     bucket: str = ""          # tokens-bucket the decision was keyed on
+    budget: float = 1.0       # comm resource budget -> ring_channels()
 
 
 def split_decision(

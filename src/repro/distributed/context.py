@@ -26,16 +26,18 @@ class CommCtx:
     """Everything the fused collective ops need to know about the layout."""
     tp_axis: str = "model"
     dp_axes: Tuple[str, ...] = ("data",)
-    mode: str = "fused"            # vanilla | reordered | fused | nocomm
+    mode: str = "fused"            # vanilla | reordered | fused | ring | nocomm
     eps: float = 1e-6
     use_pallas: bool = False
     interpret: bool = False        # pallas interpret mode (CPU validation)
     bf16_wire: bool = False        # pin collective dtype (see ParallelConfig)
+    comm_budget: float = 1.0       # SM-equivalent fraction -> ring channels
 
     @property
     def sharded_residual(self) -> bool:
-        """fused/reordered keep the residual stream token-sharded over TP."""
-        return self.mode in ("fused", "reordered")
+        """fused/reordered/ring keep the residual stream token-sharded
+        over TP."""
+        return self.mode in ("fused", "reordered", "ring")
 
     def tp_size(self) -> int:
         return lax.axis_size(self.tp_axis)

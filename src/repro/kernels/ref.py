@@ -54,6 +54,16 @@ def flash_attention_ref(q, k, v, *, causal: bool, window: int = 0,
     return out.astype(q.dtype)
 
 
+def _chunk_owner(rank: int, n_dev: int) -> int:
+    """Ring chunk-ownership contract: which token chunk device ``rank``
+    norms.  MUST match ``lax.psum_scatter(..., tiled=True)`` — device r
+    owns rows [r*C, (r+1)*C) — or the ring kernel's output disagrees with
+    the psum_scatter/all_gather composition it substitutes for.  Kept as
+    a named function so the fused-path fault-injection test can plant a
+    wrong-ownership schedule and prove the numerics pin catches it."""
+    return rank % n_dev
+
+
 def ring_ar_rmsnorm_ref(shards, residual_shards, weight, eps: float = 1e-6):
     """Oracle for kernels/ring_ar_rmsnorm.py.
 
@@ -68,12 +78,13 @@ def ring_ar_rmsnorm_ref(shards, residual_shards, weight, eps: float = 1e-6):
     total = sum(s.astype(jnp.float32) for s in shards)
     t_tokens = total.shape[0]
     shard_len = t_tokens // n
-    new_residuals, normed_shards = [], []
+    new_residuals, normed = [], [None] * n
     for i in range(n):
-        sl = total[i * shard_len:(i + 1) * shard_len]
+        own = _chunk_owner(i, n)
+        sl = total[own * shard_len:(own + 1) * shard_len]
         out, new_r = fused_residual_rmsnorm_ref(
             sl.astype(shards[0].dtype), residual_shards[i], weight, eps)
-        normed_shards.append(out)
+        normed[own] = out
         new_residuals.append(new_r)
-    full = jnp.concatenate(normed_shards, axis=0)
+    full = jnp.concatenate(normed, axis=0)
     return [full for _ in range(n)], new_residuals

@@ -14,10 +14,21 @@ remote DMAs, which likewise leaves the compute units almost entirely free:
 
 Chunk ownership matches `lax.psum_scatter(..., tiled=True)`: device r ends
 up owning rows [r*C, (r+1)*C), so this kernel is a drop-in for the
-psum_scatter/all_gather pair in core.fused_collectives.
+psum_scatter/all_gather pair in core.fused_collectives — and IS dispatched
+there on the serving hot path (``comm_norm`` mode="ring", DESIGN.md §2)
+whenever the backend supports it, falling back to that composition
+otherwise.
 
-Validated multi-device on CPU via the Pallas TPU interpret machinery
-(`pltpu.InterpretParams`) against kernels/ref.ring_ar_rmsnorm_ref.
+The ``channels`` knob is the TPU analogue of the paper's 2-8 SM resource
+grant: it sizes the in-flight comm-slot ring lanes (HBM staging slots +
+their semaphores), mapped from a plan entry's SM-equivalent ``budget`` by
+``core.splitting.ring_channels`` (DESIGN.md §14).
+
+Numerics are pinned against kernels/ref.ring_ar_rmsnorm_ref and the
+unfused vanilla composition by tests/test_fused_path.py (in-process and
+subprocess-distributed); on backends whose Pallas interpreter cannot
+emulate remote DMAs (jax < 0.5 CPU) the ring mode gates to the fallback
+composition instead of running this kernel.
 """
 from __future__ import annotations
 
@@ -31,7 +42,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _kernel(x_hbm, res_ref, w_ref, out_hbm, res_out_ref, comm_hbm,
             acc_vmem, send_vmem, chunk_vmem, send_sem, recv_sem, free_sem,
-            *, n_dev: int, chunk: int, eps: float, axis_name: str):
+            *, n_dev: int, chunk: int, eps: float, axis_name: str,
+            channels: int):
     me = jax.lax.axis_index(axis_name)
     right = jax.lax.rem(me + 1, n_dev)
     left = jax.lax.rem(me - 1 + n_dev, n_dev)
@@ -48,9 +60,9 @@ def _kernel(x_hbm, res_ref, w_ref, out_hbm, res_out_ref, comm_hbm,
     first = jax.lax.rem(me - 1 + n_dev, n_dev)
     dma_in(first, send_vmem)
     for s in range(n_dev - 1):
-        slot = s % 2
-        # wait until the receiver freed this comm slot (steps >= 2)
-        if s >= 2:
+        slot = s % channels
+        # wait until the receiver freed this comm slot (steps >= channels)
+        if s >= channels:
             pltpu.semaphore_wait(free_sem.at[slot], 1)
         rcp = pltpu.make_async_remote_copy(
             src_ref=send_vmem,
@@ -95,14 +107,14 @@ def _kernel(x_hbm, res_ref, w_ref, out_hbm, res_out_ref, comm_hbm,
     wcp.wait()
 
     # ---- phase 3: ring all-gather of normed chunks ----------------------
-    # semaphore pairing: each device emits N-1 phase-1 free signals; N-3 are
-    # consumed by phase-1 sends (s>=2) and the final two by phase-3's first
-    # two sends, which guarantees the receiver has drained its phase-1 slots
-    # before phase-3 data lands (no cross-phase race). Phase-3 emits its own
-    # signals only while a later sender still waits, so all semaphores end
-    # at zero.
+    # semaphore pairing (k = channels): each device emits N-1 phase-1 free
+    # signals; N-1-k are consumed by phase-1 sends (s >= k) and the final k
+    # by phase-3's first k sends, which guarantees the receiver has drained
+    # its phase-1 slots before phase-3 data lands (no cross-phase race).
+    # Phase-3 emits its own signals only while a later sender still waits
+    # (s + k < N-1), so all semaphores end at zero for ANY k in [1, N-1].
     for s in range(n_dev - 1):
-        slot = s % 2
+        slot = s % channels
         pltpu.semaphore_wait(free_sem.at[slot], 1)
         rcp = pltpu.make_async_remote_copy(
             src_ref=send_vmem,
@@ -115,7 +127,7 @@ def _kernel(x_hbm, res_ref, w_ref, out_hbm, res_out_ref, comm_hbm,
                                    send_sem.at[1])
         cp.start()
         cp.wait()
-        if s + 2 < n_dev - 1:
+        if s + channels < n_dev - 1:
             pltpu.semaphore_signal(free_sem.at[slot], 1, device_id=(left,),
                                    device_id_type=pltpu.DeviceIdType.MESH)
         idx = jax.lax.rem(me - s - 1 + 2 * n_dev, n_dev)
@@ -129,17 +141,22 @@ def _kernel(x_hbm, res_ref, w_ref, out_hbm, res_out_ref, comm_hbm,
 
 def ring_fused_ar_rmsnorm(x, residual, weight, *, axis_name: str,
                           n_dev: int, eps: float = 1e-6,
-                          interpret: bool = False):
+                          interpret: bool = False, channels: int = 2):
     """Inside shard_map over `axis_name` (size n_dev).
 
     x: (T, d) per-device partial sums; residual: (T//n_dev, d) own token
     slice; weight: (d,). Returns (normed_full (T, d), new_residual).
+
+    ``channels`` = in-flight ring comm lanes (the SM-equivalent resource
+    grant; see module docstring). Clamped to [1, n_dev-1] — more lanes
+    than ring hops buys nothing.
     """
     t_tokens, d = x.shape
     assert t_tokens % n_dev == 0
     chunk = t_tokens // n_dev
+    channels = max(1, min(int(channels), max(n_dev - 1, 1)))
     kernel = functools.partial(_kernel, n_dev=n_dev, chunk=chunk, eps=eps,
-                               axis_name=axis_name)
+                               axis_name=axis_name, channels=channels)
     out, new_res, _ = pl.pallas_call(
         kernel,
         in_specs=[
@@ -155,15 +172,15 @@ def ring_fused_ar_rmsnorm(x, residual, weight, *, axis_name: str,
         out_shape=[
             jax.ShapeDtypeStruct((t_tokens, d), x.dtype),
             jax.ShapeDtypeStruct((chunk, d), residual.dtype),
-            jax.ShapeDtypeStruct((2, chunk, d), x.dtype),
+            jax.ShapeDtypeStruct((channels, chunk, d), x.dtype),
         ],
         scratch_shapes=[
             pltpu.VMEM((chunk, d), x.dtype),             # acc
             pltpu.VMEM((chunk, d), x.dtype),             # send
             pltpu.VMEM((chunk, d), x.dtype),             # chunk in
             pltpu.SemaphoreType.DMA((3,)),
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.REGULAR((2,)),
+            pltpu.SemaphoreType.DMA((channels,)),
+            pltpu.SemaphoreType.REGULAR((channels,)),
         ],
         compiler_params=getattr(pltpu, "CompilerParams",
                                 getattr(pltpu, "TPUCompilerParams", None)

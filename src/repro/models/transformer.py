@@ -347,6 +347,9 @@ class WeaveInfo:
     budget: float = 1.0   # comm resource-budget fraction the plan granted
     sim_method: str = ""  # plan-forced sim pricing mode; "" = legacy
     #                       comm-mode mapping (obs/attribution.py)
+    comm_mode: str = ""   # plan-forced comm_norm mode ("ring" when the
+    #                       plan dispatches the real fused kernel); "" =
+    #                       pcfg.comm_mode
 
 
 def _active_policy(pcfg: ParallelConfig):
@@ -354,17 +357,27 @@ def _active_policy(pcfg: ParallelConfig):
     return pcfg.overlap_policy or DEFAULT_POLICY
 
 
-def _plan_meta(policy, site: str, tokens: int, tp: int, family: str
-               ) -> Tuple[float, str]:
-    """(budget, sim_method) granted by the active plan at this key.
+def _plan_meta(policy, site: str, tokens: int, tp: int, family: str,
+               has_split: bool = False) -> Tuple[float, str, str]:
+    """(budget, sim_method, comm_mode) granted by the active plan.
 
     sim_method stays "" (= the legacy comm-mode mapping in
     obs/attribution.py) unless a plan entry forces a different pricing
-    mode: ``none`` disables the fused collective entirely -> vanilla."""
+    mode: ``none`` disables the fused collective entirely -> vanilla;
+    the fused methods price as the ring kernel (``ring`` unsplit,
+    ``ringweave`` when the split actually fired).  comm_mode is "ring"
+    for the fused methods — ``forward`` threads it into ``_comm_ctx`` so
+    ``comm_norm`` dispatches the real kernel (DESIGN.md §2)."""
     plan = policy.plan_for(site, tokens, tp=tp, family=family)
     if plan is None:
-        return 1.0, ""
-    return plan.budget, ("vanilla" if plan.method == "none" else "")
+        return 1.0, "", ""
+    if plan.method == "none":
+        return plan.budget, "vanilla", ""
+    if plan.method == "fused-unsplit":
+        return plan.budget, "ring", "ring"
+    if plan.method == "fused":
+        return plan.budget, "ringweave" if has_split else "ring", "ring"
+    return plan.budget, "", ""
 
 
 def weave_decision_info(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
@@ -399,18 +412,25 @@ def weave_decision_info(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
                              "verify" if decode else "prefill"),
                          plan_id=pid, bucket=token_bucket(b * s))
     if paged_pool and not packed:
+        # the shared pool forbids a batch split, but the plan's METHOD
+        # still applies: a fused entry dispatches the ring kernel unsplit
+        site = ("decode" if decode and s == 1 else
+                "verify" if decode else "prefill")
+        budget, sim, cm = _plan_meta(policy, site, b * s, tp, family,
+                                     has_split=False)
         return WeaveInfo(False, None, "paged_pool_unsplit",
                          "batch" if decode else "seq", thr, 0,
-                         site="decode" if decode and s == 1 else
-                         "verify" if decode else "prefill",
-                         plan_id=pid, bucket=token_bucket(b * s))
+                         site=site, plan_id=pid, bucket=token_bucket(b * s),
+                         budget=budget, sim_method=sim, comm_mode=cm)
     if packed:
         d = policy.decide("packed", b * s, unit=pcfg.split_unit_for(tp),
                           min_tokens=thr, tp=tp, family=family)
-        budget, sim = _plan_meta(policy, "packed", b * s, tp, family)
+        budget, sim, cm = _plan_meta(policy, "packed", b * s, tp, family,
+                                     has_split=d.split is not None)
         return WeaveInfo(d.split is not None, d.split, d.reason, "packed",
                          thr, d.unit, site="packed", plan_id=d.plan_id,
-                         bucket=d.bucket, budget=budget, sim_method=sim)
+                         bucket=d.bucket, budget=budget, sim_method=sim,
+                         comm_mode=cm)
     if decode:
         unit = max(tp, 8)
         if s > 1:
@@ -426,17 +446,20 @@ def weave_decision_info(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
             d = policy.decide("decode", b, unit=unit, min_tokens=2 * unit,
                               tp=tp, family=family)
             site = "decode"
-        budget, sim = _plan_meta(policy, site, b * s, tp, family)
+        budget, sim, cm = _plan_meta(policy, site, b * s, tp, family,
+                                     has_split=d.split is not None)
         return WeaveInfo(d.split is not None, d.split, d.reason, "batch",
                          thr, d.unit, site=site, plan_id=d.plan_id,
-                         bucket=d.bucket, budget=budget, sim_method=sim)
+                         bucket=d.bucket, budget=budget, sim_method=sim,
+                         comm_mode=cm)
     d = policy.decide("prefill", b * s, unit=pcfg.split_unit_for(tp),
                       min_tokens=thr, row_multiple=b, tp=tp, family=family)
-    budget, sim = _plan_meta(policy, "prefill", b * s, tp, family)
     split = None if d.split is None else (d.split[0] // b, d.split[1] // b)
+    budget, sim, cm = _plan_meta(policy, "prefill", b * s, tp, family,
+                                 has_split=split is not None)
     return WeaveInfo(split is not None, split, d.reason, "seq", thr, d.unit,
                      site="prefill", plan_id=d.plan_id, bucket=d.bucket,
-                     budget=budget, sim_method=sim)
+                     budget=budget, sim_method=sim, comm_mode=cm)
 
 
 def _decide_split(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
@@ -459,16 +482,21 @@ def weave_decision(b: int, s: int, *, tp: int, pcfg: ParallelConfig,
 
 
 def _comm_ctx(pcfg: ParallelConfig, cfg: ModelConfig, t_local: int,
-              tp: int) -> CommCtx:
-    """Pick the effective comm mode: the token-sharded (fused/reordered)
-    layouts need t_local divisible by tp; otherwise fall back to vanilla
-    (the paper's fallback for small decode batches)."""
-    mode = pcfg.comm_mode
-    if mode in ("fused", "reordered") and (t_local % tp != 0 or t_local < tp):
+              tp: int, *, mode: Optional[str] = None,
+              budget: float = 1.0) -> CommCtx:
+    """Pick the effective comm mode: the token-sharded (fused/reordered/
+    ring) layouts need t_local divisible by tp; otherwise fall back to
+    vanilla (the paper's fallback for small decode batches).  ``mode``
+    overrides ``pcfg.comm_mode`` when the overlap plan forces one
+    ("ring" = dispatch the real fused kernel, DESIGN.md §14); ``budget``
+    is the plan's comm resource grant, sizing the ring kernel's lanes."""
+    mode = mode or pcfg.comm_mode
+    if (mode in ("fused", "reordered", "ring")
+            and (t_local % tp != 0 or t_local < tp)):
         mode = "vanilla"
     return CommCtx(tp_axis=pcfg.tp_axis, dp_axes=pcfg.dp_axes, mode=mode,
                    eps=cfg.norm_eps, use_pallas=pcfg.use_pallas_norm,
-                   bf16_wire=pcfg.bf16_wire)
+                   bf16_wire=pcfg.bf16_wire, comm_budget=budget)
 
 
 def _entry_norm(emb, w_first, ctx):
@@ -509,7 +537,13 @@ def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
         positions = jnp.broadcast_to(
             jnp.arange(s_total, dtype=jnp.int32)[None], (b, s_total))
 
-    ctx = _comm_ctx(pcfg, cfg, b * s_total, tp)
+    packed = packed_slots is not None
+    winfo = weave_decision_info(
+        b, s_total, tp=tp, pcfg=pcfg, decode=decode, packed=packed,
+        paged_pool=(decode and block_tables is not None and not packed),
+        family=cfg.family)
+    ctx = _comm_ctx(pcfg, cfg, b * s_total, tp,
+                    mode=winfo.comm_mode or None, budget=winfo.budget)
     emb = E.embed_tokens(params["embedding"], tokens, tp_axis=ctx.tp_axis,
                          scale=cfg.embed_scale)
     if extra_embeds is not None:
@@ -520,11 +554,10 @@ def forward(params, tokens, *, cfg: ModelConfig, pcfg: ParallelConfig,
     d = cfg.d_model
     w_first = params["norm_first"][0]
 
-    packed = packed_slots is not None
-    split = _decide_split(b, s_total, tp=tp, pcfg=pcfg, decode=decode,
-                          packed=packed, family=cfg.family)
+    split = winfo.split
     if decode and block_tables is not None and not packed:
         split = None  # shared pool cannot be forked across a batch split
+        #               (weave_decision_info already refused via paged_pool)
     pslots = None
     if split is not None and packed:
         s1, _ = split          # cut along the flat packed token axis

@@ -43,7 +43,8 @@ class WeaveAttribution:
     #                      weave_disabled | paged_pool_unsplit |
     #                      plan_split | plan_unsplit
     split: Optional[Tuple[int, int]]
-    method: str          # tokenweave | fuseonly | reordered | vanilla
+    method: str          # tokenweave | ringweave | ring | fuseonly |
+    #                      reordered | vanilla
     threshold: int
     unit: int
     est_compute: float
@@ -98,11 +99,13 @@ class Attributor:
 
     def attribute(self, info: WeaveInfo, *, b: int, s: int, n_real: int,
                   kind: str) -> WeaveAttribution:
-        if info.weave:
-            method = "tokenweave"
-        elif info.sim_method:
-            # a tuned plan entry forced this pricing mode (DESIGN.md §14)
+        if info.sim_method:
+            # a tuned plan entry forced this pricing mode (DESIGN.md §14);
+            # checked BEFORE info.weave so a fused plan split prices as
+            # ringweave, not as the composed tokenweave
             method = info.sim_method
+        elif info.weave:
+            method = "tokenweave"
         else:
             method = {"fused": "fuseonly",
                       "reordered": "reordered"}.get(self.pcfg.comm_mode,

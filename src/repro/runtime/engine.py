@@ -706,6 +706,9 @@ class Engine:
             w = m.get("engine/site_weave", **labels)
             m.gauge("engine/site_weave_rate", **labels).set(
                 (w.value if w is not None else 0) / inst.value)
+            fz = m.get("engine/site_fused", **labels)
+            m.gauge("engine/site_fused_rate", **labels).set(
+                (fz.value if fz is not None else 0) / inst.value)
         m.gauge("spec/acceptance_rate").set(st.spec.acceptance_rate)
         m.gauge("spec/tokens_per_step").set(st.spec.tokens_per_step)
         m.gauge("latency/goodput").set(st.latency.goodput)
@@ -914,6 +917,10 @@ class Engine:
         if info.weave:
             st._weave_forwards.inc()
             self.metrics.counter("engine/site_weave", site=site).inc()
+        if info.comm_mode == "ring":
+            # a tuned plan routed this site onto the REAL fused ring
+            # AllReduce-RMSNorm kernel (method fused / fused-unsplit)
+            self.metrics.counter("engine/site_fused", site=site).inc()
         if self._attributor is not None:
             att = self._attributor.attribute(info, b=b, s=s, n_real=n_real,
                                              kind=kind)

@@ -12,8 +12,17 @@ smart-splitting matter (paper Fig. 9).
 Modes (match core.fused_collectives + the weave):
     vanilla    serial: AR -> unfused add+norm on every device
     reordered  serial: RS -> add+norm(1/N) -> AG, unfused ops
-    fuseonly   serial: fused RS+norm+AG kernel (paper TokenWeave-fuseonly)
-    tokenweave fused kernel + two-split overlap    (paper full TokenWeave)
+    fuseonly   serial: fused RS+norm+AG composition (XLA collectives +
+               fused add/norm kernel between them)
+    tokenweave composed-fused kernel + two-split overlap (naive-weave /
+               the pre-ring full TokenWeave)
+    ring       serial: the REAL one-kernel ring AllReduce-RMSNorm
+               (kernels/ring_ar_rmsnorm.py) — norm math never leaves
+               VMEM, priced from its ring-lane resource budget
+               (``ring_channels``, DESIGN.md §14) instead of the generic
+               contention model
+    ringweave  ring kernel + two-split overlap — the full TokenWeave
+               configuration the paper ships (plan method ``fused``)
     nocomm     collectives removed (paper vllm-nocomm counterfactual)
 
 Speculative decoding (``spec_decode_latency`` / ``spec_decode_summary``)
@@ -29,7 +38,8 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.analysis.roofline import HBM_BW, ICI_EFF, PEAK_FLOPS
 from repro.configs.base import ModelConfig
-from repro.core.splitting import smart_split, naive_split
+from repro.core.splitting import (MAX_RING_CHANNELS, naive_split,
+                                  ring_channels, smart_split)
 
 BYTES = 2  # bf16
 
@@ -158,6 +168,15 @@ def t_norm(tokens: int, d: int, hw: HW, *, fused: bool) -> float:
     return passes * tokens * d * BYTES / hw.hbm
 
 
+def t_ring_norm(tokens: int, d: int, hw: HW) -> float:
+    """The one-kernel ring path's norm epilogue on the owned 1/N chunk:
+    the reduced x arrives over the wire straight into VMEM and the normed
+    output leaves the same way, so only the residual stream touches HBM —
+    one read + one write (2 passes vs the composed path's 4; the paper's
+    'minimal HBM traffic' property, kernels/ring_ar_rmsnorm.py)."""
+    return 2 * tokens * d * BYTES / hw.hbm
+
+
 # --------------------------------------------------------------------------
 # schedules
 # --------------------------------------------------------------------------
@@ -185,6 +204,31 @@ def _budgeted(hw: HW, comm_budget: Optional[float]) -> Tuple[HW, HW]:
     return hw_compute, hw_comm
 
 
+# ring-kernel resource model (DESIGN.md §14): the fused ring kernel's
+# resource grant is its LANE COUNT c = ring_channels(budget), the paper's
+# 2-8 SM knob.  A few lanes already saturate the wire (the paper's fused
+# kernel holds AR bandwidth with 2-8 of 132 SMs): wire efficiency is
+# min(1, c/_RING_SAT).  Compute is relieved by the lanes NOT granted —
+# the same MFU-tax shape as ``_budgeted`` with b_eff = c/MAX_RING_CHANNELS
+# — so a half-budget ring entry keeps full wire speed while returning
+# compute, which is exactly why the tuner prefers it over the composed
+# path's linear-in-b wire model.
+_RING_SAT = 4
+
+
+def _ring_budgeted(hw: HW, comm_budget: Optional[float]) -> Tuple[HW, HW]:
+    """(hw_compute, hw_comm) for the ring modes, priced from lanes."""
+    b = 1.0 if comm_budget is None else comm_budget
+    if not (0.0 < b <= 1.0):
+        raise ValueError(f"comm_budget must be in (0, 1], got {b}")
+    c = max(1, ring_channels(b))
+    hw_comm = dataclasses.replace(hw, ici=hw.ici * min(1.0, c / _RING_SAT))
+    b_eff = c / MAX_RING_CHANNELS
+    mfu = hw.mfu_cap * (1.0 - _BUDGET_TAX * b_eff) / (1.0 - _BUDGET_TAX)
+    hw_compute = dataclasses.replace(hw, mfu_cap=mfu)
+    return hw_compute, hw_comm
+
+
 def layer_ops(cfg: ModelConfig, mode: str, tokens: int, ctx: int, tp: int,
               hw: HW, n_layers: int = 4, smart: bool = True,
               split: Optional[Tuple[int, int]] = None,
@@ -199,10 +243,17 @@ def layer_ops(cfg: ModelConfig, mode: str, tokens: int, ctx: int, tp: int,
     d = cfg.d_model
     n = tp
     ops: List[Op] = []
-    hwc, hwm = _budgeted(hw, comm_budget)
+    ring = mode in ("ring", "ringweave")
+    hwc, hwm = (_ring_budgeted if ring else _budgeted)(hw, comm_budget)
 
     def comm_block(tag: str, t: int, deps) -> Tuple[str, List[Op]]:
         """the AR(+norm) slot; returns (terminal op name, ops)."""
+        if ring:
+            # one-kernel ring RS+norm+AG: norm never leaves VMEM
+            dur = (2 * t_rs_or_ag(t, d, n, hwm)
+                   + t_ring_norm(max(t // n, 1), d, hwm))
+            o = Op(f"ring{tag}", "comm", dur, tuple(deps))
+            return o.name, [o]
         if mode == "nocomm":
             o = Op(f"norm{tag}", "compute", t_norm(t, d, hwc, fused=False),
                    tuple(deps))
@@ -224,7 +275,7 @@ def layer_ops(cfg: ModelConfig, mode: str, tokens: int, ctx: int, tp: int,
         o = Op(f"fused{tag}", "comm", dur, tuple(deps))
         return o.name, [o]
 
-    if mode in ("vanilla", "reordered", "fuseonly", "nocomm"):
+    if mode in ("vanilla", "reordered", "fuseonly", "nocomm", "ring"):
         prev = ()
         for i in range(n_layers):
             at = Op(f"attn{i}", "compute",
@@ -240,12 +291,12 @@ def layer_ops(cfg: ModelConfig, mode: str, tokens: int, ctx: int, tp: int,
             prev = (t2,)
         return ops
 
-    assert mode == "tokenweave"
+    assert mode in ("tokenweave", "ringweave")
     if split is None:
         split = smart_split(tokens, hw.tile) if smart else naive_split(tokens)
     if split is None:
-        return layer_ops(cfg, "fuseonly", tokens, ctx, tp, hw, n_layers,
-                         comm_budget=comm_budget)
+        return layer_ops(cfg, "ring" if ring else "fuseonly", tokens, ctx,
+                         tp, hw, n_layers, comm_budget=comm_budget)
     t0, t1v = split
     cache_ctx = max(ctx - tokens, 0)   # pre-existing (chunked-prefill) kv
     prev = {0: (), 1: ()}

@@ -3,14 +3,18 @@ deterministic, like test_splitting_props.py).
 
 Seeded random traces — mixed prefill lengths, prefix-shared prompts,
 spec-decode windows (γ ∈ {0..3}), and mid-flight cancellations — are
-replayed through THREE engine configurations:
+replayed through FIVE engine configurations:
 
   * two-dispatch over the paged block pool,
   * packed hybrid batching over the paged block pool,
   * two-dispatch over legacy slots,
+  * packed over the paged pool with an all-``fused`` overlap plan (the
+    ring AllReduce-RMSNorm hot path, DESIGN.md §2/§14),
+  * two-dispatch over legacy slots with the same fused plan,
 
-asserting greedy token-IDENTITY across all three for every surviving
-request, plus invariant sweeps at every step and at end of trace:
+asserting greedy token-IDENTITY across all five for every surviving
+request — packed-fused vs packed-weave vs two-dispatch, on both KV
+backends — plus invariant sweeps at every step and at end of trace:
 
   * ``PackedPlan.total_tokens <= chunk_tokens`` (the §6 budget),
   * a cache slot is only ever reassigned after its owner finished,
@@ -27,6 +31,27 @@ from repro.runtime.requests import Request, State
 from repro.runtime.scheduler import PackedPlan
 
 N_TRACES = 25
+
+
+@pytest.fixture(scope="session")
+def fused_plan_path(tmp_path_factory):
+    """An overlap plan forcing method=``fused`` (ring kernel + weave,
+    half the ring-lane budget) at EVERY tiny/tp1 site and bucket, so the
+    fused engine columns exercise the plan-forced ring comm path — which
+    on this backend walks the fallback ladder, and must stay
+    token-identical either way."""
+    from repro.core.policy import PLAN_VERSION, PlanEntry, SITES, TunedPolicy
+    from repro.core.splitting import DEFAULT_BUCKET_EDGES, token_bucket
+    buckets = {token_bucket(lo, DEFAULT_BUCKET_EDGES)
+               for lo in DEFAULT_BUCKET_EDGES} | {token_bucket(0)}
+    entries = tuple(PlanEntry(site=site, bucket=b, tp=1, family="dense",
+                              method="fused", split_frac=0.5, budget=0.5)
+                    for site in SITES for b in sorted(buckets))
+    plan = TunedPolicy(plan_id=424242, version=PLAN_VERSION,
+                       bucket_edges=DEFAULT_BUCKET_EDGES, entries=entries)
+    path = tmp_path_factory.mktemp("plans") / "all_fused.json"
+    plan.save(str(path))
+    return str(path)
 
 
 # --------------------------------------------------------------------------
@@ -126,24 +151,31 @@ def _check_end_state(eng):
 # --------------------------------------------------------------------------
 
 @pytest.mark.parametrize("trial", range(N_TRACES))
-def test_differential_trace(trial, tiny_engine_builder):
+def test_differential_trace(trial, tiny_engine_builder, fused_plan_path):
     rng = np.random.RandomState(1000 + trial)
     prompts, outs, gamma, cancels = _gen_trace(rng)
     kw = dict(max_batch=3, chunk_tokens=48, max_len=128, prefill_bucket=16,
               block_size=16, spec_gamma=gamma)
 
     results = {}
-    for name, cfg in (("two_paged", dict(paged=True, packed=False)),
-                      ("packed_paged", dict(paged=True, packed=True)),
-                      ("two_legacy", dict(paged=False, packed=False))):
+    for name, cfg in (
+            ("two_paged", dict(paged=True, packed=False)),
+            ("packed_paged", dict(paged=True, packed=True)),
+            ("two_legacy", dict(paged=False, packed=False)),
+            # the fused-path columns: the same traces with the all-fused
+            # overlap plan installed, on both KV backends
+            ("packed_fused", dict(paged=True, packed=True,
+                                  plan_path=fused_plan_path)),
+            ("two_legacy_fused", dict(paged=False, packed=False,
+                                      plan_path=fused_plan_path))):
         eng = tiny_engine_builder(**kw, **cfg)
         results[name] = _drive(eng, prompts, outs, cancels)
 
     ref = results["two_paged"]
-    assert results["packed_paged"] == ref, (
-        trial, gamma, cancels, results["packed_paged"], ref)
-    assert results["two_legacy"] == ref, (
-        trial, gamma, cancels, results["two_legacy"], ref)
+    for name in ("packed_paged", "two_legacy", "packed_fused",
+                 "two_legacy_fused"):
+        assert results[name] == ref, (
+            trial, gamma, cancels, name, results[name], ref)
     # every surviving request ran to its full budget
     for rid, out in ref.items():
         assert len(out) == outs[rid]

@@ -21,8 +21,8 @@ from repro.core.policy import (DEFAULT_POLICY, PLAN_VERSION, SITES,
                                OverlapPlan, PlanEntry, ThresholdPolicy,
                                TunedPolicy, load_policy)
 from repro.core.splitting import (DEFAULT_BUCKET_EDGES, plan_split,
-                                  smart_split, split_decision, token_bucket,
-                                  wave_count)
+                                  ring_channels, smart_split, split_decision,
+                                  token_bucket, wave_count)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_PLAN = os.path.join(REPO, "benchmarks", "plans", "default.json")
@@ -214,7 +214,7 @@ def test_committed_default_plan_loads_and_covers_tiny():
 # autotuner determinism
 # --------------------------------------------------------------------------
 
-def test_autotune_is_deterministic_and_prefers_canonical_weave():
+def test_autotune_is_deterministic_and_prefers_fused_weave():
     from repro.analysis.autotune import build_default_plan
     p1 = build_default_plan()
     p2 = build_default_plan()
@@ -224,14 +224,21 @@ def test_autotune_is_deterministic_and_prefers_canonical_weave():
     committed = TunedPolicy.load(DEFAULT_PLAN)
     assert committed.plan_id == p1.plan_id
     assert committed.entries == p1.entries
-    # comm-free regime (tp=1 small buckets) must NOT weave — splitting
-    # only adds weight-read passes when there is nothing to hide
+    # comm-free regime (tp=1 small buckets) must NOT split — splitting
+    # only adds weight-read passes when there is nothing to hide; the
+    # one-kernel ring path still wins on its cheaper norm epilogue
     tiny_small = [e for e in p1.entries
                   if e.tp == 1 and e.bucket in ("0-15", "16-31", "32-63")]
-    assert tiny_small and all(e.method != "weave" for e in tiny_small)
-    # comm-bound regime (tp=8 large buckets) must weave
+    assert tiny_small and all(e.method == "fused-unsplit"
+                              for e in tiny_small)
+    # comm-bound regime (tp=8 large buckets) must run the full TokenWeave
+    # configuration: ring kernel + wave-aware split, with a sub-full ring
+    # lane grant (the paper's few-SM fused collective)
     big = [e for e in p1.entries if e.tp == 8 and e.bucket == "4096-8191"]
-    assert big and all(e.method == "weave" for e in big)
+    assert big and all(e.method == "fused" for e in big)
+    assert all(ring_channels(e.budget) >= 1 for e in big)
+    # and nowhere does the composed weave beat the ring-fused one
+    assert all(e.method != "weave" for e in p1.entries)
 
 
 # --------------------------------------------------------------------------
