@@ -753,6 +753,98 @@ def serve_cluster(quick=False):
          f"mono_weaves={x['mono_weaves']:.0f}")
 
 
+def serve_cluster_wire(quick=False):
+    """Wire transport + failure handling on the serving hot path
+    (runtime/transport.py + runtime/cluster.py, DESIGN.md §15).
+
+    A disaggregated fleet served over the LOOPBACK WIRE: every submit
+    envelope and KV-migration payload crosses the versioned frame codec
+    (the same bytes a socket would carry), with per-byte wire latency
+    charged into migration delay.  Mid-trace one decode replica is
+    KILLED; the heartbeat detector requeues everything it owned onto the
+    survivors with recompute semantics.  Hard assertions: outputs stay
+    token-identical to a never-failed single engine, the death/requeue
+    counters fire, and the block-pool quiescence sweep passes afterwards.
+    Gated metrics: wire frame/byte counts and the frame-size p50 straight
+    from the ``cluster/wire/*`` registry instruments, plus the
+    ``cluster/replica_deaths`` / ``cluster/requeued`` fault counters."""
+    from repro.configs.base import ModelConfig, ParallelConfig
+    from repro.models.build import build_model
+    from repro.runtime.cluster import ClusterConfig, ClusterServer, Replica
+    from repro.runtime.engine import Engine
+    from repro.runtime.requests import poisson_arrivals, sharegpt_like_trace
+    from repro.runtime.scheduler import SchedulerConfig
+
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=128, dtype="float32")
+    pcfg = ParallelConfig(tokenweave=True, comm_mode="fused", remat=False,
+                          split_unit=16, tokenweave_min_tokens=48)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    api = build_model(cfg, pcfg, tp=1)
+    params = api.init(jax.random.PRNGKey(0))
+
+    jit_cache = {}
+
+    def engine():
+        return Engine(api, mesh, params,
+                      SchedulerConfig(max_batch=8, chunk_tokens=64,
+                                      max_len=96, prefill_bucket=16,
+                                      paged=True, block_size=8),
+                      jit_cache=jit_cache)
+
+    n_req = 10 if quick else 16
+
+    def trace():
+        t = sharegpt_like_trace(n_req, vocab=cfg.vocab_size, seed=13,
+                                max_in=32, max_out=24)
+        for r in t:
+            r.max_new_tokens = max(12, min(r.max_new_tokens, 24))
+        return poisson_arrivals(t, rate=2.0, seed=7)
+
+    ref_eng = engine()
+    for r in trace():
+        ref_eng.add_request(r)
+    ref = {r.rid: r.output for r in ref_eng.run()}
+
+    reps = [Replica("p0", engine(), role="prefill"),
+            Replica("d0", engine(), role="decode"),
+            Replica("d1", engine(), role="decode")]
+    cs = ClusterServer(reps, ClusterConfig(
+        router="round_robin", wire="loopback", wire_per_byte=1e-6,
+        heartbeat_timeout=2.0))
+    for r in trace():
+        cs.submit(r)
+    cs.kill_replica("d0", at=3.0)          # mid-trace decode-replica crash
+    t0 = time.perf_counter()
+    done = cs.run()
+    dt = time.perf_counter() - t0
+    assert {r.rid: r.output for r in done} == ref, \
+        "wire cluster with replica kill changed outputs!"
+    assert cs.stats.replica_deaths == 1, "the kill never landed"
+    assert cs.stats.requeued >= 1, \
+        "d0 died holding no work — the recovery path went unexercised"
+    cs.check_quiescent()
+
+    snap = cs.metrics_snapshot()
+    steps = sum(r.engine.stats.steps for r in reps)
+    _row("serve/cluster_wire", dt * 1e6 / max(steps, 1),
+         f"frames={int(snap['cluster/wire/frames'])} "
+         f"bytes={int(snap['cluster/wire/bytes'])} "
+         f"frame_bytes_p50={snap['cluster/wire/frame_bytes/p50']:.0f} "
+         f"replica_deaths={int(snap['cluster/replica_deaths'])} "
+         f"requeued={int(snap['cluster/requeued'])} "
+         f"outputs_identical=True")
+    _reg("serve/cluster_wire/frames", snap, "cluster/wire/frames")
+    _reg("serve/cluster_wire/bytes", snap, "cluster/wire/bytes")
+    _reg("serve/cluster_wire/frame_bytes_p50", snap,
+         "cluster/wire/frame_bytes/p50")
+    _reg("serve/cluster_wire/replica_deaths", snap,
+         "cluster/replica_deaths")
+    _reg("serve/cluster_wire/requeued", snap, "cluster/requeued")
+
+
 def serve_policy(quick=False):
     """Per-site overlap policy & tuned plan cache (core/policy.py +
     analysis/autotune.py, DESIGN.md §14).
@@ -1106,7 +1198,8 @@ def profile_calibration(quick=False, report_path=None):
 FIGS = [fig1_comm_overhead, fig4_fused_kernel, fig9_smart_split,
         fig11_latency, fig12_throughput, fig12_engine_cpu,
         serve_prefix_cache, serve_spec_decode, serve_packed, serve_online,
-        serve_cluster, serve_policy, fig14_overlap_comparison,
+        serve_cluster, serve_cluster_wire, serve_policy,
+        fig14_overlap_comparison,
         fig16_ablation, kernels_micro]
 
 

@@ -48,6 +48,7 @@ _SEGMENT = {
     "preempt": "queued",
     "handoff_export": "migrating",
     "handoff_adopt": "decode",
+    "requeue": "queued",     # replica died; re-admitted elsewhere (§15)
 }
 
 

@@ -35,13 +35,32 @@ analytically by ``sim/overlap_sim.cluster_summary`` and CPU-real by the
 
 **Determinism.**  Time is the same virtual clock as runtime/server.py
 (§10): per-replica clocks advance by ``StepCost`` per engine step, and the
-cluster executes one global event order — the earliest of (cancel, route,
-replica step), replicas tied on time by index.  Routing at time t happens
-only once no replica has work strictly before t, so router inputs are
-replayable state; with greedy sampling the emitted tokens are
-batch-composition-invariant, so cluster outputs are token-identical to a
-single engine on the same trace for EVERY router (pinned by
-tests/test_cluster.py and the `serve/cluster` benchmark).
+cluster executes one global event order — the earliest of (cancel, kill,
+dead-replica detection, route, replica step), replicas tied on time by
+index.  Routing at time t happens only once no replica has work strictly
+before t, so router inputs are replayable state; with greedy sampling the
+emitted tokens are batch-composition-invariant, so cluster outputs are
+token-identical to a single engine on the same trace for EVERY router
+(pinned by tests/test_cluster.py and the `serve/cluster` benchmark).
+
+**Wire transport** (DESIGN.md §15): ``ClusterConfig.wire="loopback"``
+routes every arrival envelope and KV-migration payload through the
+versioned frame codec (runtime/transport.py) — a real encode→decode round
+trip with frame/byte accounting and payload-proportional virtual latency
+(``wire_per_byte``), deterministic because no socket is involved.  Real
+replicas plug in the same way: ``Replica(name, RemoteEngine(host, port))``
+drives an engine hosted in another process over TCP with the same codec.
+
+**Failure handling** (DESIGN.md §15): replicas heartbeat by ticking;
+``kill_replica(name, at)`` models a machine crash on the virtual clock
+(the replica stops heartbeating and ticking at ``at``), and the detector
+declares it dead once ``heartbeat_timeout`` passes without a heartbeat —
+on real sockets a failed RPC (``ReplicaGone``) is the missed heartbeat.
+Detection requeues every request the dead replica owned (queued, parked,
+in-flight adoption, waiting, active) onto surviving replicas with
+recompute semantics (``Engine.evacuate`` + ``reset_for_requeue``) —
+refcount-correct, which ``check_quiescent`` still verifies over the dead
+replica's pool (fault-injection-pinned by tests/test_cluster.py).
 """
 from __future__ import annotations
 
@@ -52,8 +71,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.obs.metrics import MetricsRegistry
 from repro.runtime.engine import Engine, Handoff
 from repro.runtime.prefix_cache import chain_hashes
-from repro.runtime.requests import Request, State
+from repro.runtime.requests import Request, State, reset_for_requeue
 from repro.runtime.server import StepCost
+from repro.runtime.transport import (LoopbackTransport, ReplicaGone,
+                                     handoff_from_wire, handoff_to_wire,
+                                     request_from_wire, request_to_wire)
 
 
 @dataclasses.dataclass
@@ -81,6 +103,18 @@ class ClusterConfig:
     # cluster startup (core/policy.py, DESIGN.md §14); None keeps each
     # engine's own policy
     plan_path: Optional[str] = None
+    # --- wire transport (DESIGN.md §15) ---
+    # None: in-process object passing (the §11 default).  "loopback":
+    # every arrival envelope and migration payload round-trips the frame
+    # codec (runtime/transport.py) with byte accounting — deterministic,
+    # no sockets.  Socket replicas need no cluster flag: RemoteEngine
+    # carries its own channel.
+    wire: Optional[str] = None
+    wire_per_byte: float = 0.0        # virtual secs/byte added to handoffs
+    # --- failure handling (DESIGN.md §15) ---
+    # a replica is declared dead this long (virtual) after its last
+    # heartbeat (= last completed tick, or the kill time)
+    heartbeat_timeout: float = 3.0
 
 
 class ClusterStats:
@@ -98,6 +132,9 @@ class ClusterStats:
         self._affinity_routed = r.counter("cluster/affinity_routed")
         self._affinity_hits = r.counter("cluster/affinity_hits")
         self._cancelled = r.counter("cluster/cancelled")
+        # failure handling (DESIGN.md §15)
+        self._replica_deaths = r.counter("cluster/replica_deaths")
+        self._requeued = r.counter("cluster/requeued")
 
     @property
     def migrations_started(self) -> int:
@@ -114,6 +151,14 @@ class ClusterStats:
     @property
     def cancelled(self) -> int:
         return self._cancelled.value
+
+    @property
+    def replica_deaths(self) -> int:
+        return self._replica_deaths.value
+
+    @property
+    def requeued(self) -> int:
+        return self._requeued.value
 
     @property
     def affinity_hit_rate(self) -> float:
@@ -142,6 +187,14 @@ class Replica:
         # cluster-wide default; None is filled in by ClusterServer
         self.step_cost = step_cost
         self.clock = 0.0
+        # liveness (DESIGN.md §15): a dead replica stops ticking at once,
+        # but the ROUTER keeps sending to it until the detector declares
+        # it dead (``detected``) — requests routed inside that window
+        # strand in its queue and are requeued at detection, the
+        # realistic cost of failure detection by timeout
+        self.alive = True
+        self.detected = False
+        self.last_heartbeat = 0.0
         self._pending: List[Tuple[float, int, Request]] = []   # arrivals
         self._adopt: List[Tuple[float, int, Handoff]] = []     # migrations
         self._finished_cursor = 0
@@ -157,7 +210,9 @@ class Replica:
     def next_work_time(self) -> Optional[float]:
         """Earliest virtual time this replica can make progress: now if the
         engine holds any request, else its next queued arrival/adoption,
-        else None (quiescent)."""
+        else None (quiescent or dead)."""
+        if not self.alive:
+            return None
         if (self.engine.sched.waiting
                 or any(r is not None for r in self.engine.sched.active)):
             return self.clock
@@ -201,6 +256,7 @@ class Replica:
             self.step_cost = StepCost()
         self.clock += self.step_cost.of(
             self.engine.stats.forward_tokens - before)
+        self.last_heartbeat = self.clock
         return True
 
     def take_new_finished(self) -> List[Request]:
@@ -333,6 +389,11 @@ class ClusterServer:
             self.ingress = mixed
             self.decode_fleet = []
 
+        if self.cfg.wire not in (None, "loopback"):
+            raise ValueError(f"unknown wire mode {self.cfg.wire!r} "
+                             f"(expected None or 'loopback')")
+        self.wire = (LoopbackTransport() if self.cfg.wire == "loopback"
+                     else None)
         self.metrics = MetricsRegistry()
         self.stats = ClusterStats(self.metrics)
         # the fleet shares ONE recorder (first traced engine wins): one
@@ -347,6 +408,10 @@ class ClusterServer:
         self._cancels: List[Tuple[float, int]] = []
         self._by_rid: Dict[int, Request] = {}
         self._rr: Dict[Tuple[str, ...], int] = {}
+        self._by_name: Dict[str, Replica] = {r.name: r for r in replicas}
+        # failure injection/detection event queues (DESIGN.md §15)
+        self._kills: List[Tuple[float, str]] = []
+        self._detects: List[Tuple[float, str]] = []
 
     # ------------------------------------------------------------------
     # client API
@@ -369,6 +434,17 @@ class ClusterServer:
         t = self._by_rid[rid].arrival_time if at is None else at
         bisect.insort(self._cancels, (t, rid))
 
+    def kill_replica(self, name: str, at: float) -> None:
+        """Fault injection (DESIGN.md §15): model a machine crash at
+        virtual time ``at``.  The replica stops heartbeating and ticking;
+        everything it owns is requeued onto surviving replicas once the
+        detector fires at ``at + heartbeat_timeout``.  Requests routed to
+        it in the detection window strand in its queue until then — the
+        realistic cost of failure detection by timeout."""
+        if name not in self._by_name:
+            raise ValueError(f"unknown replica {name!r}")
+        bisect.insort(self._kills, (at, name))
+
     # ------------------------------------------------------------------
     # internals
     # ------------------------------------------------------------------
@@ -382,9 +458,38 @@ class ClusterServer:
                              f"block_size, got {sorted(sizes)}")
         return sizes.pop()
 
+    def _routable(self, fleet: List[Replica], what: str) -> List[Replica]:
+        """Router candidates: every replica not yet DETECTED dead — the
+        frontend cannot know about a crash before the detector fires, so
+        the detection window routes into a dead replica's queue."""
+        cands = [r for r in fleet if not r.detected]
+        if not cands:
+            raise RuntimeError(f"no alive {what} replica left in the fleet")
+        return cands
+
+    def _wire_transfer(self, kind: str, obj: object) -> Tuple[object, int]:
+        """Round-trip one envelope through the loopback codec with frame
+        and byte accounting (the §15 ``cluster/wire/*`` metrics the
+        `serve/cluster_wire` benchmark exports)."""
+        got, nbytes = self.wire.transfer(kind, obj)
+        self.metrics.counter("cluster/wire/frames").inc()
+        self.metrics.counter("cluster/wire/bytes").inc(nbytes)
+        self.metrics.histogram("cluster/wire/frame_bytes").observe(nbytes)
+        return got, nbytes
+
     def _route_arrival(self) -> None:
         t, _, req = self._arrivals.pop(0)
-        target = self.router(self, req, self.ingress, t)
+        if self.wire is not None:
+            # the envelope a socket frontend would send: round-trip it
+            # through the codec so the wire schema stays honest even in
+            # the deterministic twin.  The decoded copy is only checked —
+            # the cluster keeps routing the ORIGINAL object so identity-
+            # based bookkeeping (cancel, placement) is unchanged.
+            got, _ = self._wire_transfer("submit", request_to_wire(req))
+            decoded = request_from_wire(got)
+            assert (decoded.rid, decoded.prompt) == (req.rid, req.prompt)
+        target = self.router(self, req,
+                             self._routable(self.ingress, "ingress"), t)
         self.placement[req.rid] = target.name
         if self.disaggregated:
             req.handoff_after_prefill = True
@@ -393,9 +498,28 @@ class ClusterServer:
     def _dispatch_handoffs(self, rep: Replica) -> None:
         for h in rep.engine.take_handoffs():
             self.stats._migrations_started.inc()
-            target = self.router(self, h.req, self.decode_fleet, rep.clock)
-            at = rep.clock + self.cfg.migration_cost.of(h.n_tokens)
-            target.queue_adoption(at, h)
+            delay = self.cfg.migration_cost.of(h.n_tokens)
+            if self.wire is not None:
+                # KV payload crosses the codec for real: the adopted
+                # blocks are the decoded bytes, and the transfer adds
+                # payload-proportional virtual latency
+                got, nbytes = self._wire_transfer(
+                    "handoff", handoff_to_wire(h))
+                h = handoff_from_wire(got, req=h.req)
+                delay += self.cfg.wire_per_byte * nbytes
+                self.metrics.histogram("cluster/wire/latency").observe(
+                    self.cfg.wire_per_byte * nbytes)
+            target = self.router(self, h.req,
+                                 self._routable(self.decode_fleet,
+                                                "decode"), rep.clock)
+            if self.obs is not None and self.wire is not None:
+                # per-replica wire track: replica clocks can leapfrog, so
+                # a single shared track would break trace monotonicity
+                self.obs.complete(
+                    f"wire/{rep.name}", f"migrate/{h.req.rid}",
+                    ts=rep.clock, dur=delay, cat="wire",
+                    args={"n_tokens": h.n_tokens, "to": target.name})
+            target.queue_adoption(rep.clock + delay, h)
 
     def _collect_finished(self, rep: Replica) -> None:
         for req in rep.take_new_finished():
@@ -455,26 +579,98 @@ class ClusterServer:
         self.aborted.append(req)
 
     # ------------------------------------------------------------------
+    # failure handling (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def _mark_dead(self, rep: Replica, t: float) -> None:
+        rep.alive = False
+        rep.clock = max(rep.clock, t)
+        self.stats._replica_deaths.inc()
+        if self.obs is not None:
+            self.obs.instant(rep.name, "replica_dead", ts=rep.clock,
+                             cat="fault")
+        bisect.insort(self._detects,
+                      (rep.clock + self.cfg.heartbeat_timeout, rep.name))
+
+    def _process_kill(self) -> None:
+        t, name = self._kills.pop(0)
+        rep = self._by_name[name]
+        if rep.alive:
+            self._mark_dead(rep, t)
+
+    def _schedule_death(self, rep: Replica) -> None:
+        """A socket replica died mid-RPC (``ReplicaGone``): the failed
+        call is the missed heartbeat, so detection fires one timeout after
+        the replica's last observed progress."""
+        if rep.alive:
+            self._mark_dead(rep, rep.clock)
+
+    def _process_detect(self) -> None:
+        """Declare a replica dead and requeue everything it owned —
+        queued arrivals and in-flight adoptions (cluster-side), plus
+        parked/waiting/active requests (``Engine.evacuate``) — onto
+        surviving ingress replicas with recompute semantics.  DONE
+        requests already left the replica via ``_collect_finished``."""
+        t, name = self._detects.pop(0)
+        rep = self._by_name[name]
+        rep.detected = True            # out of every router candidate set
+        stranded = ([req for _, _, req in rep._pending]
+                    + [h.req for _, _, h in rep._adopt])
+        rep._pending.clear()
+        rep._adopt.clear()
+        for req in stranded:
+            reset_for_requeue(req)
+        evacuated = rep.engine.evacuate()
+        for req in stranded + evacuated:
+            if req.state == State.DONE:
+                continue
+            # re-admission is a fresh arrival at detection time; keeping
+            # the original arrival_time would re-emit the rid's "arrival"
+            # instant in the past and break per-thread trace monotonicity
+            req.arrival_time = t
+            if self.disaggregated:
+                req.handoff_after_prefill = True
+            target = self.router(self, req,
+                                 self._routable(self.ingress, "ingress"), t)
+            self.placement[req.rid] = target.name
+            self.stats._requeued.inc()
+            if self.obs is not None:
+                self.obs.request_event(
+                    req.rid, "requeue", ts=t,
+                    args={"from": name, "to": target.name,
+                          "recovered_tokens": len(req.output)})
+            target.submit(req, at=t)
+
+    # ------------------------------------------------------------------
     # serving loop
     # ------------------------------------------------------------------
     def run(self) -> List[Request]:
         """Serve until every submitted request reached a terminal state.
         One global deterministic event order: the earliest of (cancel,
-        route, replica step); at equal times cancels run first, then
-        routing, then the lowest-index replica steps."""
+        kill, detect, route, replica step); at equal times cancels run
+        first, then kills, then detections, then routing, then the
+        lowest-index replica steps."""
         steps = 0
         while True:
             t_cancel = self._cancels[0][0] if self._cancels else None
+            t_kill = self._kills[0][0] if self._kills else None
+            t_detect = self._detects[0][0] if self._detects else None
             t_route = self._arrivals[0][0] if self._arrivals else None
             work = [(w, i) for i, rep in enumerate(self.replicas)
                     if (w := rep.next_work_time()) is not None]
             t_work = min(work)[0] if work else None
-            times = [t for t in (t_cancel, t_route, t_work) if t is not None]
+            times = [t for t in (t_cancel, t_kill, t_detect, t_route,
+                                 t_work) if t is not None]
             if not times:
                 break
             t = min(times)
             if t_cancel is not None and t_cancel <= t:
                 self._process_cancel()
+                continue
+            if t_kill is not None and t_kill <= t:
+                self._process_kill()
+                continue
+            if t_detect is not None and t_detect <= t:
+                self._process_detect()
                 continue
             if t_route is not None and t_route <= t:
                 self._route_arrival()
@@ -482,7 +678,14 @@ class ClusterServer:
             _, i = min(w for w in work if w[0] <= t)
             rep = self.replicas[i]
             rep.clock = max(rep.clock, t)
-            if rep.tick():
+            try:
+                progressed = rep.tick()
+            except ReplicaGone:
+                # a socket replica died mid-RPC: treat the failed call as
+                # the missed heartbeat and let the detector requeue
+                self._schedule_death(rep)
+                continue
+            if progressed:
                 steps += 1
                 if steps > self.cfg.max_steps:
                     raise RuntimeError(
@@ -507,8 +710,14 @@ class ClusterServer:
         """End-of-trace invariant sweep (tests + fault injection lean on
         this): every block table released and every refcount back to zero
         on every replica — a leaking ``import_blocks``/``free_request`` is
-        caught here, not silently absorbed."""
+        caught here, not silently absorbed.  Dead LOCAL replicas are still
+        swept (``evacuate`` is what empties them, so a leaky evacuation
+        trips here); remote replicas sweep host-side via their own
+        ``check_quiescent`` RPC."""
         for rep in self.replicas:
+            if hasattr(rep.engine, "check_quiescent"):
+                rep.engine.check_quiescent()   # RemoteEngine (§15)
+                continue
             mgr = rep.engine.block_mgr
             if mgr is None:
                 continue

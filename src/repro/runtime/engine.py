@@ -62,7 +62,7 @@ from repro.runtime import kv_cache as KC
 from repro.runtime import paging as PG
 from repro.runtime import spec as SP
 from repro.runtime.paging import BlockManager
-from repro.runtime.requests import Request, State
+from repro.runtime.requests import Request, State, reset_for_requeue
 from repro.runtime.sampler import sample
 from repro.runtime.scheduler import (PackedPlan, Scheduler, SchedulerConfig)
 
@@ -791,6 +791,36 @@ class Engine:
 
     def take_handoffs(self) -> List[Handoff]:
         out, self.handoff_ready = self.handoff_ready, []
+        return out
+
+    def evacuate(self) -> List[Request]:
+        """Dead-replica recovery (runtime/cluster.py, DESIGN.md §15):
+        release every resource of every live request this engine owns —
+        paged blocks (prefix-shared refs included), legacy slots, parked
+        handoffs, scheduler entries — and return the requests reset for
+        re-admission elsewhere (WAITING, recompute semantics like
+        preemption).  In a real deployment the dead machine's memory is
+        simply gone; the deterministic twin models that by sweeping the
+        pool back to empty, which is exactly what makes a requeue that
+        SKIPS the release visible to ``ClusterServer.check_quiescent``
+        (the fault-injection tests monkeypatch this to leak)."""
+        out: List[Request] = []
+        for h in self.take_handoffs():
+            # exporter-side refs were already released at park
+            out.append(reset_for_requeue(h.req))
+        for r in list(self.sched.waiting):
+            self.sched.remove_waiting(r)
+            out.append(reset_for_requeue(r))
+        for slot, r in enumerate(self.sched.active):
+            if r is None:
+                continue
+            if self.paged:
+                self.block_mgr.free_request(r.rid)
+            elif not self._is_ssm:
+                self.cache = KC.reset_slots(self.cache,
+                                            np.asarray([r.slot]))
+            self.sched.active[slot] = None
+            out.append(reset_for_requeue(r))
         return out
 
     def adopt_request(self, req: Request, n_tokens: int, payload) -> bool:

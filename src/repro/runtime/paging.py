@@ -228,6 +228,16 @@ def select_payload(payload, idx: Sequence[int]):
     return {k: a[:, sel] for k, a in payload.items()}
 
 
+def payload_nbytes(payload) -> int:
+    """Raw KV bytes of an extracted migration payload tree (stacked or
+    per-layer) — the size the wire transport prices and the per-transport
+    byte histograms account (runtime/transport.py, DESIGN.md §15)."""
+    if not _stacked(payload):
+        return sum(int(a.nbytes) for layer in payload.values()
+                   for a in layer.values())
+    return sum(int(a.nbytes) for a in payload.values())
+
+
 # ==========================================================================
 # host side: allocator + manager
 # ==========================================================================

@@ -52,6 +52,10 @@ class Request:
     # instead of re-migrating)
     handoff_after_prefill: bool = False
     migrations: int = 0               # completed prefill->decode handoffs
+    # re-admissions after a replica death (runtime/cluster.py failure
+    # handling, DESIGN.md §15) — counted separately from ``preemptions``
+    # because the trigger is a machine fault, not pool pressure
+    requeues: int = 0
     # --- online serving (runtime/server.py, DESIGN.md §10) ---
     # all times are VIRTUAL (deterministic server clock), not wall clock
     arrival_time: float = 0.0         # when the request enters the system
@@ -117,6 +121,22 @@ class Request:
             return True
         return self.finish_time is not None and \
             self.finish_time <= self.deadline
+
+
+def reset_for_requeue(req: Request) -> Request:
+    """Return a request to WAITING for re-admission on another replica
+    after its owner died (runtime/cluster.py + runtime/transport.py,
+    DESIGN.md §15).  Same recompute semantics as scheduler preemption:
+    generated tokens fold into the context via ``resumed`` and prefill
+    restarts from zero, so with greedy sampling the recovered output is
+    token-identical to a never-failed run."""
+    req.state = State.WAITING
+    req.slot = None
+    req.prefill_pos = 0
+    req.prompt_hit_tokens = 0
+    req.resumed = bool(req.output)
+    req.requeues += 1
+    return req
 
 
 def fixed_trace(n_requests: int, input_len: int, output_len: int,

@@ -251,6 +251,43 @@ class OnlineServer:
             times.append(self._cancels[0][0])
         return min(times) if times else None
 
+    def pump(self, max_steps: Optional[int] = None) -> int:
+        """Live-serving drain (runtime/http_api.py, DESIGN.md §15):
+        process every due cancel/expiry/arrival and step the engine until
+        it goes idle (or ``max_steps`` iterations), then RETURN instead of
+        blocking — unlike ``run()``, new submissions may land between
+        pumps, so going idle is not the end of the world.  Streaming,
+        latency stamping and the unservable-request guard are identical
+        to ``run()``; returns the number of engine steps taken."""
+        eng = self.engine
+        steps = 0
+        while True:
+            if eng.obs is not None:
+                eng.obs.sync(self.clock)
+            self._process_cancels()
+            self._expire_deadlines()
+            self._admit_arrivals()
+            tokens_before = eng.stats.forward_tokens
+            if not eng.step():
+                nxt = self._next_event_time()
+                if nxt is not None:
+                    # a future-scheduled cancel/arrival: jump like run()
+                    self.clock = max(self.clock, nxt)
+                    continue
+                if eng.sched.waiting:
+                    rids = [r.rid for r in eng.sched.waiting]
+                    raise RuntimeError(
+                        f"server idle with unservable waiting request(s) "
+                        f"{rids}: block pool too small for their context")
+                return steps
+            steps += 1
+            self.clock += self.cfg.step_cost.of(
+                eng.stats.forward_tokens - tokens_before)
+            self._stream_new_tokens()
+            self._collect_finished()
+            if max_steps is not None and steps >= max_steps:
+                return steps
+
     def run(self) -> List[Request]:
         """Serve until every submitted request reached a terminal state
         (completed, cancelled, or expired).  Returns completions in finish

@@ -1,13 +1,24 @@
-"""Cluster serving layer (runtime/cluster.py, DESIGN.md §11).
+"""Cluster serving layer (runtime/cluster.py, DESIGN.md §11 + §15).
 
 Covers the router contract (token-identity vs a single engine for every
 router, deterministic prefix-affinity placement under seeded traces), the
 KV-migration lifecycle (block-table + payload copy, refcounts back to
 zero on BOTH exporter and importer after finish and after cancels at
 every migration stage, prefix re-registration and importer-side sharing),
-and fault injection proving the quiescence sweep catches a refcount-
-leaking ``import_blocks``.
+fault injection proving the quiescence sweep catches a refcount-leaking
+``import_blocks``, the §15 failure handling (kill a replica mid-prefill /
+mid-migration / mid-decode — requeued requests finish token-identical to
+a never-failed run, refcounts sweep to zero, lifecycle traces stay
+valid, and a requeue that skips the KV release is CAUGHT), the loopback
+wire (every envelope and payload through the frame codec), and the
+multi-process socket cluster (real ``EngineHost`` workers, a hard kill
+mid-run, requeue recovery over TCP).
 """
+import json
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 
@@ -367,3 +378,294 @@ def test_decref_skipping_free_request_is_caught(tiny_model):
     cs.run()
     with pytest.raises(AssertionError):
         cs.check_quiescent()
+
+
+# --------------------------------------------------------------------------
+# failure handling (DESIGN.md §15): kill -> heartbeat-timeout detect ->
+# requeue on survivors, token-identical to a never-failed run
+# --------------------------------------------------------------------------
+
+def _reference(tiny_model, trace):
+    ref_eng = _engine(tiny_model)
+    for r in trace:
+        ref_eng.add_request(r)
+    return {r.rid: r.output for r in ref_eng.run()}
+
+
+def test_kill_mid_decode_requeues_token_identical(tiny_model):
+    ref = _reference(tiny_model, _trace(n=6))
+
+    reps = [Replica(f"r{i}", _engine(tiny_model)) for i in range(2)]
+    cs = ClusterServer(reps, ClusterConfig(router="round_robin"))
+    for r in _trace(n=6):
+        cs.submit(r)
+    cs.kill_replica("r0", at=8.0)       # mid-run: r0 owns decoding work
+    done = cs.run()
+    assert {r.rid: r.output for r in done} == ref
+    assert cs.stats.replica_deaths == 1
+    assert cs.stats.requeued >= 1
+    requeued = [r for r in done if r.requeues]
+    assert requeued and all(r.requeues == 1 for r in requeued)
+    assert all(cs.placement[r.rid] == "r1" for r in requeued)
+    cs.check_quiescent()                # dead replica swept clean too
+    assert not reps[0].alive and reps[1].alive
+
+
+def test_kill_mid_prefill_requeues_token_identical(tiny_model):
+    # long prompts + a kill right after the first tick: r0 dies while its
+    # requests are still chunk-prefilling (no output yet)
+    trace = [Request(rid=i, prompt=list(range(1, 81)), max_new_tokens=4,
+                     arrival_time=0.0) for i in range(2)]
+    ref = _reference(tiny_model, [Request(rid=r.rid, prompt=list(r.prompt),
+                                          max_new_tokens=4) for r in trace])
+
+    reps = [Replica(f"r{i}", _engine(tiny_model)) for i in range(2)]
+    cs = ClusterServer(reps, ClusterConfig(router="round_robin"))
+    for r in trace:
+        cs.submit(r)
+    cs.kill_replica("r0", at=1.5)
+    done = cs.run()
+    assert {r.rid: r.output for r in done} == ref
+    killed = [r for r in done if r.requeues]
+    assert killed and all(not r.resumed or r.output for r in killed)
+    cs.check_quiescent()
+
+
+def test_kill_decode_replica_mid_migration(tiny_model):
+    # a slow wire parks the handoff in d0's adoption queue; d0 dies with
+    # the KV "in flight" — the request re-prefills via ingress and
+    # migrates to d1 instead, token-identical
+    reps = [Replica("p0", _engine(tiny_model), role="prefill"),
+            Replica("d0", _engine(tiny_model), role="decode"),
+            Replica("d1", _engine(tiny_model), role="decode")]
+    cfg = ClusterConfig(router="round_robin",
+                        migration_cost=MigrationCost(base=50.0))
+    cs = ClusterServer(reps, cfg)
+    req = Request(rid=0, prompt=list(range(1, 21)), max_new_tokens=6,
+                  arrival_time=0.0)
+    ref = _reference(tiny_model, [Request(rid=0, prompt=list(range(1, 21)),
+                                          max_new_tokens=6)])
+    cs.submit(req)
+    cs.kill_replica("d0", at=10.0)      # while the handoff rides the wire
+    done = cs.run()
+    assert {r.rid: r.output for r in done} == ref
+    assert req.requeues == 1 and req.migrations == 1
+    assert cs.stats.migrations_started == 2      # first one died in flight
+    assert reps[2].engine.block_mgr.stats.migrations_in == 1
+    assert reps[1].engine.block_mgr.stats.migrations_in == 0
+    cs.check_quiescent()
+
+
+def test_kill_strands_detection_window_arrivals(tiny_model):
+    # a request routed to a dead-but-undetected replica waits out the
+    # heartbeat timeout in its queue, then recovers on the survivor
+    reps = [Replica(f"r{i}", _engine(tiny_model)) for i in range(2)]
+    cs = ClusterServer(reps, ClusterConfig(
+        router="round_robin", heartbeat_timeout=5.0))
+    r0 = Request(rid=0, prompt=list(range(1, 11)), max_new_tokens=2,
+                 arrival_time=0.0)
+    r1 = Request(rid=1, prompt=list(range(1, 11)), max_new_tokens=2,
+                 arrival_time=1.0)   # round-robin -> lands on dead r1
+    cs.submit(r0)
+    cs.submit(r1)
+    cs.kill_replica("r1", at=0.5)
+    done = cs.run()
+    assert len(done) == 2
+    assert r1.requeues == 1 and r1.admit_time >= 0.5 + 5.0
+    cs.check_quiescent()
+
+
+def test_kill_after_finish_is_harmless(tiny_model):
+    reps = [Replica(f"r{i}", _engine(tiny_model)) for i in range(2)]
+    cs = ClusterServer(reps, ClusterConfig())
+    for r in _trace(n=2):
+        cs.submit(r)
+    cs.kill_replica("r0", at=10_000.0)  # long after the trace drains
+    done = cs.run()
+    assert len(done) == 2 and all(not r.requeues for r in done)
+    assert cs.stats.replica_deaths == 1 and cs.stats.requeued == 0
+    cs.check_quiescent()
+
+
+def test_kill_unknown_replica_rejected(tiny_model):
+    cs = ClusterServer([Replica("r0", _engine(tiny_model))], ClusterConfig())
+    with pytest.raises(ValueError, match="unknown replica"):
+        cs.kill_replica("nope", at=1.0)
+
+
+def test_requeue_lifecycle_trace_valid(tiny_model):
+    from repro.obs.trace import (TraceRecorder, export_chrome_trace,
+                                 validate_chrome_trace)
+    api, mesh, params = tiny_model
+    rec = TraceRecorder()
+    engines = [Engine(api, mesh, params,
+                      SchedulerConfig(max_batch=4, chunk_tokens=48,
+                                      max_len=96, prefill_bucket=16,
+                                      paged=True, block_size=8),
+                      obs=rec) for _ in range(2)]
+    reps = [Replica(f"r{i}", e) for i, e in enumerate(engines)]
+    cs = ClusterServer(reps, ClusterConfig(router="round_robin"))
+    for r in _trace(n=4, out=24):
+        cs.submit(r)
+    cs.kill_replica("r0", at=1.0)       # r0 still owns admitted work
+    done = cs.run()
+    assert len(done) == 4
+    assert cs.stats.requeued >= 1       # the fault actually displaced work
+    doc = export_chrome_trace(rec)
+    assert validate_chrome_trace(doc) == []
+    phases = [e["name"] for e in doc["traceEvents"]
+              if e.get("cat") == "request"]
+    assert "requeue" in phases          # the §15 lifecycle event exists
+    cs.check_quiescent()
+
+
+def test_leaky_evacuate_is_caught_by_quiescence_sweep(tiny_model):
+    # a requeue that hands the requests back but SKIPS the KV release:
+    # the survivors still finish token-identical, but the dead replica's
+    # pool is left holding refs — check_quiescent must bite
+    from repro.runtime.requests import reset_for_requeue
+    ref = _reference(tiny_model, _trace(n=4, out=24))
+
+    reps = [Replica(f"r{i}", _engine(tiny_model)) for i in range(2)]
+    cs = ClusterServer(reps, ClusterConfig(router="round_robin"))
+    eng0 = reps[0].engine
+
+    def leaky_evacuate():
+        out = [r for r in list(eng0.sched.waiting)
+               + [x for x in eng0.sched.active if x is not None]]
+        eng0.sched.waiting = []
+        eng0.sched.active = [None] * len(eng0.sched.active)
+        return [reset_for_requeue(r) for r in out]   # blocks never freed
+
+    eng0.evacuate = leaky_evacuate
+    for r in _trace(n=4, out=24):
+        cs.submit(r)
+    cs.kill_replica("r0", at=1.0)       # r0 still holds active slots
+    done = cs.run()
+    assert {r.rid: r.output for r in done} == ref    # recovery still works
+    assert cs.stats.requeued >= 1
+    with pytest.raises(AssertionError):
+        cs.check_quiescent()                         # ...but the leak bites
+
+
+# --------------------------------------------------------------------------
+# loopback wire (DESIGN.md §15): every envelope and KV payload through
+# the frame codec, deterministically
+# --------------------------------------------------------------------------
+
+def test_wire_loopback_disagg_token_identical(tiny_model):
+    ref = _reference(tiny_model, _trace(n=5))
+
+    reps = [Replica("p0", _engine(tiny_model), role="prefill"),
+            Replica("d0", _engine(tiny_model), role="decode")]
+    cs = ClusterServer(reps, ClusterConfig(
+        router="round_robin", wire="loopback", wire_per_byte=1e-6))
+    for r in _trace(n=5):
+        cs.submit(r)
+    done = cs.run()
+    assert {r.rid: r.output for r in done} == ref
+    assert cs.summary()["migrations"] == 5
+    snap = cs.metrics_snapshot()
+    # 5 submit envelopes + 5 KV handoffs crossed the codec
+    assert snap["cluster/wire/frames"] == 10
+    assert snap["cluster/wire/bytes"] > 0
+    assert snap["cluster/wire/frame_bytes/count"] == 10
+    assert cs.wire.frames == 10
+    cs.check_quiescent()
+
+
+def test_wire_loopback_matches_wireless_cluster(tiny_model):
+    def run(wire):
+        reps = [Replica("p0", _engine(tiny_model), role="prefill"),
+                Replica("d0", _engine(tiny_model), role="decode")]
+        cs = ClusterServer(reps, ClusterConfig(router="round_robin",
+                                               wire=wire))
+        for r in _trace(n=4):
+            cs.submit(r)
+        done = cs.run()
+        cs.check_quiescent()
+        return {r.rid: r.output for r in done}
+
+    assert run(None) == run("loopback")    # codec is a pure carrier
+
+
+def test_wire_loopback_with_kill_recovers(tiny_model):
+    ref = _reference(tiny_model, _trace(n=4))
+    reps = [Replica(f"r{i}", _engine(tiny_model)) for i in range(2)]
+    cs = ClusterServer(reps, ClusterConfig(router="round_robin",
+                                           wire="loopback"))
+    for r in _trace(n=4):
+        cs.submit(r)
+    cs.kill_replica("r1", at=6.0)
+    done = cs.run()
+    assert {r.rid: r.output for r in done} == ref
+    assert cs.stats.replica_deaths == 1
+    cs.check_quiescent()
+
+
+def test_unknown_wire_mode_rejected(tiny_model):
+    with pytest.raises(ValueError, match="wire mode"):
+        ClusterServer([Replica("r0", _engine(tiny_model))],
+                      ClusterConfig(wire="carrier-pigeon"))
+
+
+# --------------------------------------------------------------------------
+# multi-process socket cluster (slow): real EngineHost workers over TCP,
+# a hard kill mid-run, requeue recovery through the same codec
+# --------------------------------------------------------------------------
+
+def _spawn_worker(name, spec=None):
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    argv = [sys.executable, "-m", "repro.runtime.transport",
+            "--port", "0", "--name", name]
+    if spec:
+        argv += ["--spec", json.dumps(spec)]
+    proc = subprocess.Popen(argv, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True)
+    line = proc.stdout.readline()
+    assert line.startswith("LISTENING"), (line, proc.stderr.read()[-2000:])
+    _, host, port = line.split()
+    return proc, host, int(port)
+
+
+@pytest.mark.slow
+def test_socket_cluster_kill_and_requeue_token_identical(tiny_model):
+    from repro.runtime.transport import RemoteEngine
+
+    # DEFAULT_SPEC workers == the tiny fixture model/scheduler, so the
+    # in-process reference is the socket fleet's never-failed twin
+    ref = _reference(tiny_model, _trace(n=6))
+
+    procs, remotes = [], []
+    try:
+        for name in ("w0", "w1"):
+            proc, host, port = _spawn_worker(name)
+            procs.append(proc)
+            remotes.append(RemoteEngine(host, port, name=name, timeout=300))
+        reps = [Replica(f"r{i}", rem) for i, rem in enumerate(remotes)]
+        cs = ClusterServer(reps, ClusterConfig(router="round_robin"))
+        for r in _trace(n=6):
+            cs.submit(r)
+        # hard-kill w0 (os._exit before the reply) a few steps in: the
+        # frontend sees ReplicaGone on that RPC, detects, requeues on w1
+        remotes[0].die_after(4)
+        done = cs.run()
+        assert {r.rid: r.output for r in done} == ref
+        assert cs.stats.replica_deaths == 1
+        assert cs.stats.requeued >= 1
+        assert any(r.requeues == 1 for r in done)
+        assert not reps[0].alive and reps[1].alive
+        cs.check_quiescent()            # w1 sweeps host-side via RPC
+        assert procs[0].wait(timeout=60) == 17   # the injected hard exit
+    finally:
+        for rem in remotes:
+            try:
+                rem.close()
+            except Exception:
+                pass
+        for proc in procs:
+            proc.kill()
+            proc.wait(timeout=30)

@@ -182,6 +182,56 @@ def test_differential_trace(trial, tiny_engine_builder, fused_plan_path):
 
 
 # --------------------------------------------------------------------------
+# wire-cluster column (DESIGN.md §15): the same traces through a single
+# engine, an in-process cluster, and a loopback-wire cluster whose every
+# envelope (and, disaggregated, every KV payload) crosses the frame codec
+# --------------------------------------------------------------------------
+
+def _drive_cluster(engines, prompts, outs, roles=None, wire=None):
+    from repro.runtime.cluster import ClusterConfig, ClusterServer, Replica
+    roles = roles or ["mixed"] * len(engines)
+    reps = [Replica(f"r{i}", e, role=role)
+            for i, (e, role) in enumerate(zip(engines, roles))]
+    cs = ClusterServer(reps, ClusterConfig(router="round_robin", wire=wire))
+    for i, (p, n) in enumerate(zip(prompts, outs)):
+        cs.submit(Request(rid=i, prompt=list(p), max_new_tokens=n,
+                          arrival_time=0.25 * i))
+    done = cs.run()
+    cs.check_quiescent()
+    return {r.rid: r.output for r in done}
+
+
+@pytest.mark.parametrize("paged", [True, False], ids=["paged", "legacy"])
+@pytest.mark.parametrize("trial", range(N_TRACES))
+def test_differential_wire_cluster(trial, paged, tiny_engine_builder):
+    rng = np.random.RandomState(3000 + trial)
+    prompts, outs, _, _ = _gen_trace(rng)
+    kw = dict(max_batch=3, chunk_tokens=48, max_len=128, prefill_bucket=16,
+              block_size=16, paged=paged)
+
+    single = tiny_engine_builder(**kw)
+    for i, (p, n) in enumerate(zip(prompts, outs)):
+        single.add_request(Request(rid=i, prompt=list(p), max_new_tokens=n))
+    ref = {r.rid: r.output for r in single.run()}
+    assert sorted(ref) == list(range(len(prompts)))
+
+    inproc = _drive_cluster(
+        [tiny_engine_builder(**kw) for _ in range(2)], prompts, outs)
+    wired = _drive_cluster(
+        [tiny_engine_builder(**kw) for _ in range(2)], prompts, outs,
+        wire="loopback")
+    assert inproc == ref, (trial, paged, "inproc")
+    assert wired == ref, (trial, paged, "loopback")
+
+    if paged:
+        # disaggregated: every KV-migration payload crosses the codec too
+        disagg = _drive_cluster(
+            [tiny_engine_builder(**kw) for _ in range(2)], prompts, outs,
+            roles=["prefill", "decode"], wire="loopback")
+        assert disagg == ref, (trial, "disagg_loopback")
+
+
+# --------------------------------------------------------------------------
 # the harness must catch injected faults
 # --------------------------------------------------------------------------
 

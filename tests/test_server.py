@@ -306,3 +306,217 @@ def test_late_arrivals_never_starve_admitted_decodes(tiny_engine_builder):
         for r in early:
             assert r.finish_time <= last_flood_finish
         _leak_check(eng)
+
+
+# --------------------------------------------------------------------------
+# streaming HTTP/websocket API end-to-end (runtime/http_api.py, §15): a
+# spawned server process, a raw-socket client, token identity vs offline
+# --------------------------------------------------------------------------
+
+def _spawn_api(step_delay=0.0):
+    import os
+    import subprocess
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.runtime.http_api", "--port", "0",
+         "--step-delay", str(step_delay)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+    line = proc.stdout.readline()
+    assert line.startswith("LISTENING"), (line, proc.stderr.read()[-2000:])
+    _, host, port = line.split()
+    return proc, host, int(port)
+
+
+def _http_json(host, port, method, path, body=None):
+    import http.client
+    import json
+    conn = http.client.HTTPConnection(host, port, timeout=120)
+    payload = json.dumps(body) if body is not None else None
+    conn.request(method, path, body=payload,
+                 headers={"Content-Type": "application/json"} if payload
+                 else {})
+    resp = conn.getresponse()
+    out = json.loads(resp.read().decode("utf-8"))
+    conn.close()
+    return resp.status, out
+
+
+def _open_stream(host, port, body):
+    """POST a streaming completion over a raw socket; return (sock, file)
+    positioned after the response headers."""
+    import json
+    import socket
+    payload = json.dumps(body).encode("utf-8")
+    s = socket.create_connection((host, port), timeout=120)
+    s.sendall((f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+               f"Content-Type: application/json\r\n"
+               f"Content-Length: {len(payload)}\r\n\r\n").encode("ascii")
+              + payload)
+    f = s.makefile("rb")
+    status = f.readline()
+    assert b"200" in status, status
+    while f.readline() not in (b"\r\n", b"\n", b""):
+        pass
+    return s, f
+
+
+def _sse_events(f):
+    """Yield decoded ``data:`` payloads until ``[DONE]`` or EOF."""
+    import json
+    while True:
+        line = f.readline()
+        if not line:
+            return
+        line = line.strip()
+        if not line.startswith(b"data: "):
+            continue
+        data = line[len(b"data: "):]
+        if data == b"[DONE]":
+            return
+        yield json.loads(data.decode("utf-8"))
+
+
+@pytest.mark.slow
+def test_http_api_stream_token_identical_to_offline(tiny_engine_builder):
+    # the API worker builds transport.DEFAULT_SPEC == this local twin
+    rng = np.random.RandomState(17)
+    prompts = [[int(t) for t in rng.randint(0, 128, size=rng.randint(8, 24))]
+               for _ in range(3)]
+    outs = [6, 4, 8]
+    eng = tiny_engine_builder(max_len=96, paged=True, block_size=8)
+    for i, (p, n) in enumerate(zip(prompts, outs)):
+        eng.add_request(Request(rid=i, prompt=list(p), max_new_tokens=n))
+    ref = {r.rid: r.output for r in eng.run()}
+
+    proc, host, port = _spawn_api()
+    try:
+        status, health = _http_json(host, port, "GET", "/v1/health")
+        assert status == 200 and health["ok"]
+
+        # rid 0: streamed SSE — tokens arrive one event apiece, in order
+        s, f = _open_stream(host, port, {"prompt": prompts[0],
+                                         "max_new_tokens": outs[0],
+                                         "stream": True})
+        events = list(_sse_events(f))
+        s.close()
+        toks = [e["token"] for e in events if "token" in e]
+        assert toks == ref[0]
+        assert events[-1].get("done") and events[-1]["finish_reason"]
+
+        # rid 1: non-streamed — one JSON body after completion
+        status, body = _http_json(host, port, "POST", "/v1/completions",
+                                  {"prompt": prompts[1],
+                                   "max_new_tokens": outs[1]})
+        assert status == 200 and body["tokens"] == ref[1]
+
+        # rid 2: websocket — one text frame per token event
+        ws_toks = _ws_collect(host, port, {"prompt": prompts[2],
+                                           "max_new_tokens": outs[2]})
+        assert ws_toks == ref[2]
+
+        # bad request rejected without touching the engine
+        status, err = _http_json(host, port, "POST", "/v1/completions",
+                                 {"prompt": "not a token list"})
+        assert status == 400 and "prompt" in err["error"]
+
+        status, stats = _http_json(host, port, "GET", "/v1/stats")
+        assert stats["completed"] == 3 and stats["live_streams"] == 0
+        assert stats["tables"] == 0 and stats["leaked_blocks"] == 0
+    finally:
+        proc.terminate()
+        proc.wait(timeout=30)
+
+
+def _ws_collect(host, port, body):
+    """Minimal RFC6455 client: upgrade, send one masked text frame, read
+    unmasked server frames until the done event / close frame."""
+    import base64
+    import json
+    import os as _os
+    import socket
+    from repro.runtime.http_api import ws_read  # server-side reader reused
+
+    key = base64.b64encode(_os.urandom(16)).decode("ascii")
+    s = socket.create_connection((host, port), timeout=120)
+    s.sendall((f"GET /v1/stream HTTP/1.1\r\nHost: t\r\n"
+               f"Upgrade: websocket\r\nConnection: Upgrade\r\n"
+               f"Sec-WebSocket-Key: {key}\r\n"
+               f"Sec-WebSocket-Version: 13\r\n\r\n").encode("ascii"))
+    f = s.makefile("rb")
+    assert b"101" in f.readline()
+    while f.readline() not in (b"\r\n", b"\n", b""):
+        pass
+    payload = json.dumps(body).encode("utf-8")
+    mask = _os.urandom(4)
+    masked = bytes(b ^ mask[i % 4] for i, b in enumerate(payload))
+    s.sendall(bytes([0x81, 0x80 | len(payload)]) + mask + masked)
+
+    toks = []
+    while True:
+        opcode, data = _read_ws_frame(f)
+        if opcode == 0x8:                       # close
+            break
+        ev = json.loads(data.decode("utf-8"))
+        if "token" in ev:
+            toks.append(ev["token"])
+        if ev.get("done"):
+            break
+    s.close()
+    return toks
+
+
+def _read_ws_frame(f):
+    head = f.read(2)
+    assert len(head) == 2
+    opcode = head[0] & 0x0F
+    n = head[1] & 0x7F
+    if n == 126:
+        n = int.from_bytes(f.read(2), "big")
+    elif n == 127:
+        n = int.from_bytes(f.read(8), "big")
+    return opcode, f.read(n)
+
+
+@pytest.mark.slow
+def test_http_api_disconnect_releases_blocks():
+    import time
+    # pace the engine so the stream is observably partial at disconnect
+    proc, host, port = _spawn_api(step_delay=0.05)
+    try:
+        rng = np.random.RandomState(23)
+        prompt = [int(t) for t in rng.randint(0, 128, size=20)]
+        s, f = _open_stream(host, port, {"prompt": prompt,
+                                         "max_new_tokens": 64,
+                                         "stream": True})
+        seen = 0
+        for ev in _sse_events(f):
+            if "token" in ev:
+                seen += 1
+            if seen >= 2:
+                break                           # walk away mid-stream
+        # makefile() holds a duplicate handle: shutdown() is what actually
+        # sends the FIN the server's EOF-race is waiting on
+        import socket as _socket
+        s.shutdown(_socket.SHUT_RDWR)
+        f.close()
+        s.close()
+        assert seen == 2                        # partial, not finished
+
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            _, stats = _http_json(host, port, "GET", "/v1/stats")
+            if stats["cancelled"] >= 1 and stats["live_streams"] == 0:
+                break
+            time.sleep(0.1)
+        assert stats["cancelled"] >= 1          # EOF → cancel → abort
+        assert stats["live_streams"] == 0
+        assert stats["tables"] == 0             # blocks all released
+        assert stats["leaked_blocks"] == 0
+        assert stats["completed"] == 0
+    finally:
+        proc.terminate()
+        proc.wait(timeout=30)

@@ -1,0 +1,369 @@
+"""Wire transport (runtime/transport.py, DESIGN.md §15).
+
+Codec round-trip bit-identity over the value types the serving layer
+ships (scalars, envelopes, ragged KV payload trees in every dtype),
+rejection of truncated/corrupted/version-skewed frames, the loopback
+transport's accounting, and the socket framing (asyncio host + blocking
+client sharing one codec).  The multi-process EngineHost/RemoteEngine
+path is exercised end-to-end (with fault injection) in tests/
+test_cluster.py.
+"""
+import itertools
+import threading
+
+import numpy as np
+import pytest
+
+from repro.runtime.requests import Request, State
+from repro.runtime.transport import (DEFAULT_SPEC, LoopbackTransport,
+                                     MAGIC, ReplicaGone, TransportError,
+                                     WIRE_VERSION, decode_frame,
+                                     encode_frame, handoff_from_wire,
+                                     handoff_to_wire, request_from_wire,
+                                     request_to_wire)
+from repro.runtime.engine import Handoff
+
+
+def _assert_same(a, b):
+    """Structural equality with BIT-identical arrays."""
+    assert type(a) is type(b) or (isinstance(a, list) and isinstance(b, list))
+    if isinstance(a, dict):
+        assert sorted(a) == sorted(b)
+        for k in a:
+            _assert_same(a[k], b[k])
+    elif isinstance(a, np.ndarray):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert a.tobytes() == b.tobytes()
+    elif isinstance(a, list):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            _assert_same(x, y)
+    else:
+        assert a == b and type(a) is type(b)
+
+
+# --------------------------------------------------------------------------
+# deterministic round-trip grid
+# --------------------------------------------------------------------------
+
+_DTYPES = ("float32", "float16", "float64", "int8", "int32", "int64",
+           "uint8", "bool")
+_SHAPES = ((), (1,), (3,), (2, 5), (2, 3, 4, 2), (4, 0, 2))
+
+
+def _arr(dtype, shape, seed):
+    rng = np.random.RandomState(seed)
+    n = int(np.prod(shape, dtype=np.int64))
+    if dtype == "bool":
+        flat = rng.rand(n) > 0.5
+    elif np.issubdtype(np.dtype(dtype), np.floating):
+        flat = rng.randn(n)
+    else:
+        info = np.iinfo(dtype)
+        flat = rng.randint(info.min, info.max, size=n, dtype=dtype)
+    return flat.astype(dtype).reshape(shape)
+
+
+@pytest.mark.parametrize("dtype,shape",
+                         list(itertools.product(_DTYPES, _SHAPES)))
+def test_array_roundtrip_bit_identical(dtype, shape):
+    arr = _arr(dtype, shape, seed=hash((dtype, shape)) % 1000)
+    kind, got = decode_frame(encode_frame("blob", arr))
+    assert kind == "blob"
+    _assert_same(arr, got)
+
+
+def test_scalar_and_container_roundtrip():
+    obj = {"none": None, "t": True, "f": False, "i": -17, "big": 1 << 40,
+           "d": 3.25, "s": "héllo", "b": b"\x00\xffraw", "empty": [],
+           "nested": {"xs": [1, 2.5, "three", None, {"deep": [True]}]}}
+    kind, got = decode_frame(encode_frame("env", obj))
+    assert kind == "env"
+    _assert_same(obj, got)
+
+
+def test_noncontiguous_array_roundtrips():
+    base = np.arange(24, dtype=np.float32).reshape(4, 6)
+    view = base[::2, 1::2]                       # strided, non-contiguous
+    _, got = decode_frame(encode_frame("x", view))
+    _assert_same(np.ascontiguousarray(view), got)
+
+
+def test_stacked_and_per_layer_payload_trees_roundtrip():
+    rng = np.random.RandomState(0)
+    stacked = {"k": rng.randn(2, 3, 8, 2, 16).astype(np.float32),
+               "v": rng.randn(2, 3, 8, 2, 16).astype(np.float32),
+               "pos": rng.randint(0, 96, size=(2, 3, 8)).astype(np.int32)}
+    per_layer = {f"layer_{i}":
+                 {"k": rng.randn(3, 8, 2, 16).astype(np.float16),
+                  "v": rng.randn(3, 8, 2, 16).astype(np.float16),
+                  "pos": rng.randint(0, 96, size=(3, 8)).astype(np.int32)}
+                 for i in range(2)}
+    for payload in (stacked, per_layer):
+        _, got = decode_frame(encode_frame("handoff", payload))
+        _assert_same(payload, got)
+
+
+def test_unencodable_values_raise():
+    with pytest.raises(TypeError, match="cannot encode"):
+        encode_frame("x", object())
+    with pytest.raises(TypeError, match="keys must be str"):
+        encode_frame("x", {1: "int key"})
+    with pytest.raises(ValueError, match="kind too long"):
+        encode_frame("k" * 256, None)
+
+
+# --------------------------------------------------------------------------
+# malformed frames must raise, never mis-decode
+# --------------------------------------------------------------------------
+
+def _sample_frame():
+    return encode_frame("env", {"xs": [1, 2, 3], "arr":
+                                np.arange(6, dtype=np.int32)})
+
+
+def test_every_truncation_raises():
+    frame = _sample_frame()
+    for n in range(len(frame)):
+        with pytest.raises(TransportError):
+            decode_frame(frame[:n])
+
+
+def test_every_single_byte_corruption_raises_or_roundtrips_crc():
+    # flipping any byte must be DETECTED: header fields fail their own
+    # checks, body bytes fail the CRC, CRC bytes mismatch the body
+    frame = bytearray(_sample_frame())
+    for i in range(len(frame)):
+        bad = bytearray(frame)
+        bad[i] ^= 0xFF
+        with pytest.raises(TransportError):
+            decode_frame(bytes(bad))
+
+
+def test_trailing_garbage_raises():
+    with pytest.raises(TransportError, match="length mismatch"):
+        decode_frame(_sample_frame() + b"x")
+
+
+def test_version_skew_raises():
+    import struct
+    frame = bytearray(_sample_frame())
+    struct.pack_into("!H", frame, 4, WIRE_VERSION + 1)
+    with pytest.raises(TransportError, match="wire version"):
+        decode_frame(bytes(frame))
+
+
+def test_bad_magic_raises():
+    frame = bytearray(_sample_frame())
+    frame[:4] = b"NOPE"
+    with pytest.raises(TransportError, match="magic"):
+        decode_frame(bytes(frame))
+    assert bytes(_sample_frame()[:4]) == MAGIC
+
+
+def test_hostile_length_fields_never_overallocate():
+    # a corrupted inner length field must be caught by bounds checks, not
+    # trusted into a giant allocation
+    frame = encode_frame("s", "abc")
+    idx = frame.index(b"S") + 1                  # the string length u32
+    bad = frame[:idx] + b"\x7f\xff\xff\xff" + frame[idx + 4:]
+    with pytest.raises(TransportError):
+        decode_frame(bad)
+
+
+# --------------------------------------------------------------------------
+# property test: arbitrary nested values round-trip.  With hypothesis
+# installed the search is adversarial; without it a seeded deterministic
+# grid over the same value space runs instead (NO skip — the skip-count
+# ceiling in CI stays at the seed's capability skips).
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _random_value(rng, depth=0):
+    """Seeded generator over the codec's whole value space (the
+    deterministic twin of the hypothesis strategy below)."""
+    kinds = ["none", "bool", "int", "float", "str", "bytes", "arr"]
+    if depth < 3:
+        kinds += ["list", "dict", "list", "dict"]
+    kind = kinds[rng.randint(len(kinds))]
+    if kind == "none":
+        return None
+    if kind == "bool":
+        return bool(rng.randint(2))
+    if kind == "int":
+        return int(rng.randint(-(1 << 62), 1 << 62, dtype=np.int64))
+    if kind == "float":
+        return float(rng.randn() * 10.0 ** rng.randint(-10, 10))
+    if kind == "str":
+        return "".join(chr(rng.randint(1, 0x300))
+                       for _ in range(rng.randint(0, 20)))
+    if kind == "bytes":
+        return rng.bytes(rng.randint(0, 32))
+    if kind == "arr":
+        shape = tuple(rng.randint(0, 5)
+                      for _ in range(rng.randint(0, 4)))
+        return _arr(_DTYPES[rng.randint(len(_DTYPES))], shape,
+                    seed=rng.randint(1000))
+    if kind == "list":
+        return [_random_value(rng, depth + 1)
+                for _ in range(rng.randint(0, 5))]
+    return {f"k{i}": _random_value(rng, depth + 1)
+            for i in range(rng.randint(0, 5))}
+
+
+def _check_roundtrip(obj, kind):
+    got_kind, got = decode_frame(encode_frame(kind, obj))
+    assert got_kind == kind
+    _assert_same(obj, got)
+
+
+if HAVE_HYPOTHESIS:
+    def _values():
+        scalars = st.one_of(
+            st.none(), st.booleans(),
+            st.integers(min_value=-(1 << 62), max_value=1 << 62),
+            st.floats(allow_nan=False, width=64), st.text(max_size=20),
+            st.binary(max_size=32),
+            st.integers(0, 3).flatmap(lambda nd: st.tuples(
+                st.sampled_from(_DTYPES),
+                st.lists(st.integers(0, 4), min_size=nd, max_size=nd),
+                st.integers(0, 999)).map(
+                    lambda t: _arr(t[0], tuple(t[1]), t[2]))))
+        return st.recursive(
+            scalars,
+            lambda kids: st.one_of(
+                st.lists(kids, max_size=4),
+                st.dictionaries(st.text(max_size=8), kids, max_size=4)),
+            max_leaves=12)
+
+    @given(obj=_values(), kind=st.text(min_size=1, max_size=32))
+    @settings(max_examples=150, deadline=None)
+    def test_roundtrip_property(obj, kind):
+        _check_roundtrip(obj, kind)
+else:
+    @pytest.mark.parametrize("seed", range(60))
+    def test_roundtrip_property(seed):
+        rng = np.random.RandomState(seed)
+        for _ in range(5):
+            _check_roundtrip(_random_value(rng), f"kind{seed}")
+
+
+# --------------------------------------------------------------------------
+# request / handoff envelopes
+# --------------------------------------------------------------------------
+
+def test_request_envelope_roundtrips_every_field():
+    req = Request(rid=42, prompt=[1, 2, 3], max_new_tokens=8)
+    req.state = State.DECODE
+    req.output = [9, 8]
+    req.prefill_pos = 3
+    req.resumed = True
+    req.preemptions = 2
+    req.prompt_hit_tokens = 1
+    req.handoff_after_prefill = True
+    req.migrations = 1
+    req.requeues = 3
+    req.arrival_time = 1.5
+    req.deadline = 99.0
+    req.admit_time = 2.0
+    req.first_token_time = 4.5
+    req.finish_reason = ""
+    got = request_from_wire(
+        decode_frame(encode_frame("req", request_to_wire(req)))[1])
+    for f in ("rid", "prompt", "max_new_tokens", "state", "output",
+              "prefill_pos", "resumed", "preemptions", "prompt_hit_tokens",
+              "handoff_after_prefill", "migrations", "requeues",
+              "arrival_time", "deadline", "admit_time", "first_token_time",
+              "finish_time", "finish_reason"):
+        assert getattr(got, f) == getattr(req, f), f
+    assert got.slot is None                      # placement never ships
+
+
+def test_handoff_envelope_preserves_identity_and_payload():
+    req = Request(rid=7, prompt=[5, 6], max_new_tokens=4)
+    payload = {"k": np.random.RandomState(1).randn(2, 1, 8, 2, 16)
+               .astype(np.float32)}
+    h = Handoff(req=req, n_tokens=3, payload=payload)
+    wire = decode_frame(encode_frame("handoff", handoff_to_wire(h)))[1]
+    got = handoff_from_wire(wire, req=req)
+    assert got.req is req                        # loopback keeps identity
+    assert got.n_tokens == 3
+    _assert_same(payload, got.payload)
+    fresh = handoff_from_wire(wire)              # socket path rebuilds
+    assert fresh.req is not req and fresh.req.rid == 7
+
+
+def test_loopback_transport_accounting():
+    lo = LoopbackTransport()
+    obj = {"xs": np.arange(10, dtype=np.int64)}
+    got, nbytes = lo.transfer("submit", obj)
+    _assert_same(obj, got)
+    assert nbytes == len(encode_frame("submit", obj))
+    lo.transfer("submit", obj)
+    assert lo.frames == 2 and lo.bytes == 2 * nbytes
+
+
+def test_default_spec_is_wire_encodable():
+    _, got = decode_frame(encode_frame("spec", DEFAULT_SPEC))
+    _assert_same(DEFAULT_SPEC, got)
+
+
+# --------------------------------------------------------------------------
+# socket framing: asyncio host side + blocking client, one codec
+# --------------------------------------------------------------------------
+
+def test_socket_channel_roundtrip_and_error_frames():
+    import asyncio
+
+    from repro.runtime.transport import (SocketChannel, read_frame_async,
+                                         write_frame_async)
+
+    ready = threading.Event()
+    addr = {}
+
+    async def _serve():
+        async def handle(reader, writer):
+            while True:
+                try:
+                    kind, obj = await read_frame_async(reader)
+                except ReplicaGone:
+                    break
+                if kind == "boom":
+                    await write_frame_async(writer, "error", "kaboom")
+                    continue
+                await write_frame_async(writer, f"re:{kind}", obj)
+            writer.close()
+
+        server = await asyncio.start_server(handle, "127.0.0.1", 0)
+        addr["port"] = server.sockets[0].getsockname()[1]
+        ready.set()
+        async with server:
+            await server.serve_forever()
+
+    t = threading.Thread(target=lambda: asyncio.run(_serve()), daemon=True)
+    t.start()
+    assert ready.wait(10)
+
+    chan = SocketChannel("127.0.0.1", addr["port"], timeout=10)
+    payload = {"arr": np.random.RandomState(3).randn(4, 7)
+               .astype(np.float32), "meta": {"rid": 1, "ok": True}}
+    got = chan.request("echo", payload)
+    _assert_same(payload, got)
+    with pytest.raises(TransportError, match="kaboom"):
+        chan.request("boom", {})
+    got2 = chan.request("echo", [1, "after", None])   # channel still usable
+    _assert_same([1, "after", None], got2)
+    assert chan.sent_frames == 3
+    chan.close()
+
+
+def test_connect_to_nowhere_raises_replica_gone():
+    from repro.runtime.transport import SocketChannel
+    with pytest.raises(ReplicaGone):
+        SocketChannel("127.0.0.1", 1, timeout=0.5)
